@@ -1,0 +1,96 @@
+"""End-to-end driver: train a ~100M-param dense model for a few hundred
+steps with the FULL production substrate — MeSP engine, SGD, checkpointing
+with auto-resume, restartable data pipeline, straggler watchdog — then
+evaluate and greedy-decode from the fine-tuned model.
+
+    PYTHONPATH=src python examples/finetune_e2e.py [--steps 300]
+
+(~100M params: 12L × d_model 768 × vocab 32k runs on this CPU at a few
+steps/sec; pass --tiny for a smoke-scale run.)
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config
+from repro.configs.base import LoRAConfig
+from repro.core import mesp
+from repro.data import make_batch_iterator
+from repro.models import model as M
+from repro.optim import sgd
+from repro.runtime.fault_tolerance import StragglerPolicy, run_resilient
+
+
+def build_cfg(tiny: bool):
+    base = get_config("qwen2.5-0.5b")
+    if tiny:
+        return base.reduced()
+    return dataclasses.replace(
+        base, n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+        head_dim=64, d_ff=2048, vocab=32768, dtype="float32",
+        lora=LoRAConfig(rank=8, alpha=16.0))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e")
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.tiny)
+    n_params = cfg.n_params()
+    print(f"model: {cfg.n_layers}L d={cfg.d_model} ≈ {n_params/1e6:.0f}M params")
+
+    opt = sgd(5e-2)
+
+    def step(params, opt_state, batch):
+        loss, grads = mesp.value_and_grad(params, cfg, batch)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    step = jax.jit(step)
+    data = make_batch_iterator(cfg.vocab, args.seq, args.batch,
+                               n_tokens=1 << 18, seed=11)
+    ckpt = Checkpointer(args.ckpt_dir, interval=100)
+
+    def init_state():
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        return params, opt.init(params)
+
+    t0 = time.monotonic()
+    losses = []
+
+    def on_step(res):
+        losses.append(res.loss)
+        if res.step % 25 == 0:
+            print(f"step {res.step:4d}  loss {res.loss:.4f}  "
+                  f"{res.seconds:.2f}s/step")
+
+    params, opt_state, results = run_resilient(
+        step, init_state, data, ckpt, args.steps,
+        straggler=StragglerPolicy(factor=20.0), on_step=on_step)
+    dt = time.monotonic() - t0
+    print(f"\ntrained {len(results)} steps in {dt:.0f}s; "
+          f"loss {losses[0]:.3f} → {sum(losses[-10:])/10:.3f}")
+
+    # --- serve from the fine-tuned params -----------------------------------
+    cache = M.init_cache(cfg, 1, 32)
+    tok = jnp.array([[1]], jnp.int32)
+    out = []
+    dstep = jax.jit(lambda p, c, t: M.decode_step(p, cfg, c, t))
+    for _ in range(16):
+        logits, cache = dstep(params, cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    print("greedy decode:", out)
+
+
+if __name__ == "__main__":
+    main()

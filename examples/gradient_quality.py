@@ -1,0 +1,59 @@
+"""Reproduce the paper's §5.6 analysis: why does MeZO converge slowly?
+
+Computes MeZO's SPSA gradient estimate and the exact (MeSP) gradient on the
+same batch and reports per-layer cosine similarity / sign agreement /
+relative error (paper Table 3), plus the variance scaling with parameter
+count (paper §3.2).
+
+    PYTHONPATH=src python examples/gradient_quality.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import gradcheck, mesp, mezo
+from repro.models import model as M
+
+
+def main():
+    cfg = dataclasses.replace(get_config("qwen2.5-0.5b").reduced(),
+                              n_layers=8)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 48), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    for _ in range(5):  # warm up so LoRA B ≠ 0
+        params, _ = mesp.train_step(params, cfg, batch, 5e-2)
+
+    _, g_true = mesp.value_and_grad(params, cfg, batch)
+    _, g_est = mezo.spsa_grad(params, cfg, batch, jax.random.PRNGKey(2))
+
+    print("layer | cosine sim | sign agree | rel. error   (paper Table 3)")
+    rows = gradcheck.per_layer_metrics(g_est["blocks"], g_true["blocks"],
+                                       cfg.n_layers)
+    for r in rows:
+        print(f"{r['layer']:5d} | {r['cosine_sim']:+.4f}    | "
+              f"{r['sign_agree']:.1%}      | {r['rel_error']:.1f}")
+    avg = gradcheck.gradient_metrics(g_est, g_true)
+    print(f"  all | {float(avg['cosine_sim']):+.4f}    | "
+          f"{float(avg['sign_agree']):.1%}      | "
+          f"{float(avg['rel_error']):.1f}")
+
+    # variance scaling: averaging K estimates improves cosine ~ sqrt(K)
+    print("\nSPSA estimates averaged | cosine vs true")
+    acc = None
+    for k in range(1, 33):
+        _, g = mezo.spsa_grad(params, cfg, batch, jax.random.PRNGKey(100 + k))
+        acc = g if acc is None else jax.tree_util.tree_map(jnp.add, acc, g)
+        if k in (1, 4, 16, 32):
+            m = gradcheck.gradient_metrics(
+                jax.tree_util.tree_map(lambda x: x / k, acc), g_true)
+            print(f"{k:23d} | {float(m['cosine_sim']):+.4f}")
+    print("\n→ single-sample MeZO directions are ≈ uncorrelated with the true "
+          "gradient (paper's explanation for its slow convergence).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: MeSP LoRA fine-tuning in ~40 lines.
+
+Builds a reduced Qwen2.5-family model, fine-tunes LoRA adapters with the
+paper's structured backward, and verifies the gradients match framework
+autodiff exactly.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import mebp, mesp
+from repro.data import make_batch_iterator
+from repro.models import model as M
+
+
+def main():
+    # 1. a model config (any of the 13 registered archs; .reduced() for CPU)
+    cfg = get_config("qwen2.5-0.5b").reduced()
+    print(f"model: {cfg.name} (reduced) — {cfg.n_layers}L d={cfg.d_model} "
+          f"LoRA r={cfg.lora.rank} on {cfg.lora.targets}")
+
+    # 2. params (frozen base + LoRA A/B) and a data stream
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    data = make_batch_iterator(cfg.vocab, seq_len=64, global_batch=4)
+
+    # 3. sanity: MeSP's hand-derived gradients == autodiff gradients
+    batch = next(data)
+    _, g_mesp = mesp.value_and_grad(params, cfg, batch)
+    _, g_mebp = mebp.value_and_grad(params, cfg, batch)
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(g_mesp), jax.tree_util.tree_leaves(g_mebp)))
+    print(f"max |MeSP_grad − autodiff_grad| = {err:.2e}  (paper §5.5)")
+
+    # 4. fine-tune
+    step = jax.jit(lambda p, b: mesp.train_step(p, cfg, b, lr=5e-2))
+    for i in range(50):
+        params, loss = step(params, next(data))
+        if i % 10 == 0:
+            print(f"step {i:3d}  loss {float(loss):.4f}")
+    print(f"final loss {float(loss):.4f}")
+
+
+if __name__ == "__main__":
+    main()

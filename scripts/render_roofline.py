@@ -1,0 +1,34 @@
+"""Render EXPERIMENTS.md §Roofline tables from a dry-run JSON dump."""
+import json
+import sys
+
+
+def main(path):
+    rs = json.load(open(path))
+    for mesh in ("16x16", "2x16x16"):
+        ok = [r for r in rs if r.get("status") == "ok" and r["mesh"] == mesh]
+        if not ok:
+            continue
+        print(f"\n### Mesh {mesh} ({256 if mesh == '16x16' else 512} chips)\n")
+        print("| arch | shape | t_compute | t_memory | t_collective | "
+              "dominant | MODEL_FLOPS | useful | roofline frac |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+            print(f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3g}s "
+                  f"| {r['t_memory_s']:.3g}s | {r['t_collective_s']:.3g}s "
+                  f"| {r['dominant']} | {r['model_flops']:.3g} "
+                  f"| {r['useful_ratio']:.3f} | {r['roofline_fraction']:.4f} |")
+    skips = [r for r in rs if r.get("status") == "skip"]
+    if skips:
+        print("\n### Skipped cells\n")
+        seen = set()
+        for r in skips:
+            k = (r["arch"], r["shape"])
+            if k in seen:
+                continue
+            seen.add(k)
+            print(f"* {r['arch']} × {r['shape']}: {r['reason']}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results_final.json")

@@ -1,0 +1,2 @@
+"""repro: MeSP (Memory-Efficient Structured Backpropagation) JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,173 @@
+"""Atomic, mesh-agnostic checkpointing with auto-resume.
+
+Design for 1000+ node fault tolerance:
+
+* **Atomicity**: writes go to ``step_XXXXXX.tmp/`` and are renamed to
+  ``step_XXXXXX/`` only after a manifest with content checksums is fsynced.
+  A crash mid-write can never corrupt the latest valid checkpoint.
+* **Mesh-agnostic**: arrays are saved in logical (unsharded) layout with the
+  pytree structure; on restore they are re-sharded to whatever mesh/sharding
+  the restarting job uses — so a job can come back on a *different* topology
+  (elastic restart, DESIGN.md §4).
+* **Data-state**: the training-data iterator state and RNG are part of the
+  manifest, so a resumed run continues the exact token stream.
+* **Retention**: ``keep`` latest checkpoints are retained; older ones are
+  garbage-collected after a successful save.
+
+Arrays are stored one ``.npy`` per leaf (keyed by flattened tree path) —
+no external deps, streaming-friendly.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_path_str(p), leaf) for p, leaf in flat], treedef
+
+
+def save_checkpoint(directory: str, step: int, params: Any,
+                    opt_state: Any = None, data_state: Optional[dict] = None,
+                    extra: Optional[dict] = None, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    manifest = {"step": step, "arrays": {}, "data_state": data_state or {},
+                "extra": extra or {}}
+    for name, tree in (("params", params), ("opt_state", opt_state)):
+        if tree is None:
+            continue
+        named, _ = _flatten_with_names(tree)
+        for key, leaf in named:
+            arr = np.asarray(jax.device_get(leaf))
+            fn = f"{name}__{key.replace('/', '.')}.npy"
+            np.save(os.path.join(tmp, fn), arr)
+            digest = hashlib.sha256(arr.tobytes()).hexdigest()[:16]
+            manifest["arrays"][fn] = {
+                "tree": name, "path": key, "shape": list(arr.shape),
+                "dtype": str(arr.dtype), "sha256_16": digest,
+            }
+
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+
+    # retention GC
+    steps = sorted(_list_steps(directory))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)
+    return final
+
+
+def _list_steps(directory: str):
+    out = []
+    for d in os.listdir(directory):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, d, "manifest.json")):
+                out.append(int(d.split("_")[1]))
+    return out
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = _list_steps(directory)
+    return max(steps) if steps else None
+
+
+def _verify(directory: str, fn: str, meta: dict) -> np.ndarray:
+    arr = np.load(os.path.join(directory, fn))
+    digest = hashlib.sha256(arr.tobytes()).hexdigest()[:16]
+    if digest != meta["sha256_16"]:
+        raise IOError(f"checksum mismatch for {fn}: checkpoint corrupt")
+    return arr
+
+
+def load_checkpoint(directory: str, step: int, params_template: Any,
+                    opt_template: Any = None, *, shardings=None,
+                    verify: bool = True) -> Tuple[Any, Any, dict, dict]:
+    """Restore into the templates' tree structure (and shardings, if given)."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_tree = {"params": {}, "opt_state": {}}
+    for fn, meta in manifest["arrays"].items():
+        arr = _verify(d, fn, meta) if verify else np.load(os.path.join(d, fn))
+        by_tree[meta["tree"]][meta["path"]] = arr
+
+    def restore(template, name, shards):
+        if template is None:
+            return None
+        named, treedef = _flatten_with_names(template)
+        leaves = []
+        shard_leaves = (jax.tree_util.tree_leaves(shards)
+                        if shards is not None else [None] * len(named))
+        for (key, leaf), sh in zip(named, shard_leaves):
+            arr = by_tree[name].get(key)
+            if arr is None:
+                raise KeyError(f"checkpoint missing leaf {name}/{key}")
+            a = np.asarray(arr, dtype=np.asarray(leaf).dtype) \
+                if hasattr(leaf, "dtype") else arr
+            leaves.append(jax.device_put(a, sh) if sh is not None
+                          else jax.numpy.asarray(a))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    params = restore(params_template, "params",
+                     shardings if shardings is not None else None)
+    opt = restore(opt_template, "opt_state", None)
+    return params, opt, manifest.get("data_state", {}), manifest.get("extra", {})
+
+
+class Checkpointer:
+    """Convenience wrapper bundling directory + interval + auto-resume."""
+
+    def __init__(self, directory: str, interval: int = 100, keep: int = 3):
+        self.directory = directory
+        self.interval = interval
+        self.keep = keep
+
+    def maybe_save(self, step: int, params, opt_state=None, data_state=None,
+                   extra=None) -> Optional[str]:
+        if step % self.interval != 0:
+            return None
+        return save_checkpoint(self.directory, step, params, opt_state,
+                               data_state, extra, keep=self.keep)
+
+    def restore_latest(self, params_template, opt_template=None, **kw):
+        step = latest_step(self.directory)
+        if step is None:
+            return None
+        params, opt, data_state, extra = load_checkpoint(
+            self.directory, step, params_template, opt_template, **kw)
+        return {"step": step, "params": params, "opt_state": opt,
+                "data_state": data_state, "extra": extra}

@@ -1,0 +1,2 @@
+"""MeSP core: structured backward passes + training engines + baselines."""
+from repro.core import flash, gradcheck, mebp, mesp, mezo, quant, structured  # noqa: F401

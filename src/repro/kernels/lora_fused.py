@@ -1,0 +1,134 @@
+"""Fused LoRA linear Pallas TPU kernel: ``y = x@W0 + s·(x@A)@B``.
+
+TPU-native extension of the paper's core insight (DESIGN.md §2): MeSP saves
+HBM *capacity* by never storing ``h = x@A``; on TPU we also save HBM
+*bandwidth* by never letting ``h`` leave VMEM — it exists only as a
+``[bm, r]`` f32 scratch tile accumulated alongside the main matmul and is
+consumed against ``B`` on the final K step. One kernel, one pass over
+``x``/``W0``; ``A``/``B`` tiles are tiny (r ≤ 32).
+
+Grid: (M/bm, N/bn, K/bk), K innermost so the f32 accumulators persist across
+the contraction. MXU alignment: bm/bn/bk multiples of 128 (r is padded to the
+lane width by Mosaic automatically).
+
+The backward fusion (``dx = dh@Aᵀ + g@W0ᵀ``) is ``lora_dx.py``'s kernel; the
+``dA``/``dB`` contractions are thin (rank-r) matmuls that XLA already emits
+optimally, and ``h`` is *recomputed* there exactly as the paper prescribes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lora_fused_kernel(x_ref, w0_ref, a_ref, b_ref, o_ref, acc_ref, h_ref, *,
+                       scale: float, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    xb = x_ref[...]
+    acc_ref[...] += jax.lax.dot(xb, w0_ref[...],
+                                preferred_element_type=jnp.float32)
+    h_ref[...] += jax.lax.dot(xb, a_ref[...],
+                              preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        delta = jax.lax.dot(h_ref[...].astype(x_ref.dtype), b_ref[...],
+                            preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + scale * delta).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "bk",
+                                             "interpret"))
+def lora_fused(x, w0, a, b, scale: float = 2.0, *, bm: int = 128,
+               bn: int = 128, bk: int = 128, interpret: bool = False):
+    """x:[M,K] w0:[K,N] a:[K,r] b:[r,N] -> [M,N]. Dims must tile by bm/bn/bk."""
+    M, K = x.shape
+    N = w0.shape[1]
+    r = a.shape[1]
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    n_k = K // bk
+
+    grid = (M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_lora_fused_kernel, scale=scale, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # x
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # w0
+            pl.BlockSpec((bk, r), lambda i, j, k: (k, 0)),    # a
+            pl.BlockSpec((r, bn), lambda i, j, k: (0, j)),    # b
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),                # W0 accumulator
+            pltpu.VMEM((bm, r), jnp.float32),                 # h tile (VMEM!)
+        ],
+        interpret=interpret,
+    )(x, w0, a, b)
+
+
+def _lora_dx_kernel(g_ref, w0t_ref, dh_ref, at_ref, o_ref, acc_ref, *,
+                    n_n: int):
+    n = pl.program_id(2)
+
+    @pl.when(n == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(g_ref[...], w0t_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(n == n_n - 1)
+    def _finish():
+        lora_part = jax.lax.dot(dh_ref[...], at_ref[...],
+                                preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + lora_part).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bm", "bk", "bn",
+                                             "interpret"))
+def lora_dx(g, w0, a, b, scale: float = 2.0, *, bm: int = 128, bk: int = 128,
+            bn: int = 128, interpret: bool = False):
+    """dx = (s·g)@Bᵀ@Aᵀ + g@W0ᵀ  (A.1 eq 13).  g:[M,N] -> dx:[M,K].
+
+    The rank-r intermediate ``dh = s·g@Bᵀ`` is a thin matmul computed here
+    (jnp — XLA emits it well); the kernel fuses the two large matmuls so ``g``
+    is read once.
+    """
+    M, N = g.shape
+    K = w0.shape[0]
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0
+    dh = ((scale * g) @ b.T).astype(g.dtype)        # [M, r] — tiny
+    w0t = w0.T                                      # [N, K]
+    at = a.T                                        # [r, K]
+    r = at.shape[0]
+    n_n = N // bn
+
+    grid = (M // bm, K // bk, n_n)
+    return pl.pallas_call(
+        functools.partial(_lora_dx_kernel, n_n=n_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, n: (i, n)),   # g
+            pl.BlockSpec((bn, bk), lambda i, j, n: (n, j)),   # w0ᵀ
+            pl.BlockSpec((bm, r), lambda i, j, n: (i, 0)),    # dh
+            pl.BlockSpec((r, bk), lambda i, j, n: (0, j)),    # aᵀ
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, n: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, K), g.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+        interpret=interpret,
+    )(g, w0t, dh, at)

@@ -1,0 +1,101 @@
+"""Jit'd public wrappers over the Pallas kernels with shape plumbing and a
+custom_vjp that composes kernel forward passes with the paper's structured
+backward rules. On non-TPU backends pass ``interpret=True`` (tests do); the
+wrappers keep the same semantics as the pure-jnp oracles in ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import lora_fused as _lf
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import flash_attention as _fa
+
+
+def _flat(x):
+    return x.reshape(-1, x.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# LoRA linear: Pallas fwd (h in VMEM) + structured bwd (h recomputed; dx via
+# the fused dx kernel; dA/dB thin matmuls)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def lora_linear_kernel(x, w0, a, b, scale: float = 2.0,
+                       interpret: bool = False):
+    """y = x@W0 + s·(x@A)@B with [..., K] inputs."""
+    lead = x.shape[:-1]
+    y = _lf.lora_fused(_flat(x), w0, a, b, scale, interpret=interpret)
+    return y.reshape(*lead, w0.shape[1])
+
+
+def _fwd(x, w0, a, b, scale, interpret):
+    return lora_linear_kernel(x, w0, a, b, scale, interpret), (x, w0, a, b)
+
+
+def _bwd(scale, interpret, res, g):
+    x, w0, a, b = res
+    lead = x.shape[:-1]
+    g2 = _flat(g).astype(x.dtype)
+    x2 = _flat(x)
+    dx = _lf.lora_dx(g2, w0, a, b, scale, interpret=interpret)
+    h = x2 @ a                                   # recomputed (paper §4.1)
+    db = h.T @ (scale * g2)
+    dh = (scale * g2) @ b.T
+    da = x2.T @ dh
+    return (dx.reshape(*lead, w0.shape[0]), jnp.zeros_like(w0),
+            da.astype(a.dtype), db.astype(b.dtype))
+
+
+lora_linear_kernel.defvjp(_fwd, _bwd)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def rmsnorm_kernel(x, w, eps: float = 1e-6, interpret: bool = False):
+    lead = x.shape[:-1]
+    return _rn.rmsnorm(_flat(x), w, eps, interpret=interpret).reshape(x.shape)
+
+
+def _rn_fwd(x, w, eps, interpret):
+    return rmsnorm_kernel(x, w, eps, interpret), (x, w)
+
+
+def _rn_bwd(eps, interpret, res, g):
+    x, w = res
+    dx, dw = _rn.rmsnorm_bwd(_flat(x), w, _flat(g), eps, interpret=interpret)
+    return dx.reshape(x.shape), dw
+
+
+rmsnorm_kernel.defvjp(_rn_fwd, _rn_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (forward kernel; GQA handled by head repeat in the wrapper)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool = True, window: int = 0,
+                           bq: int = 512, bk: int = 512,
+                           interpret: bool = False):
+    """q: [B,H,N,D]; k/v: [B,Hkv,Nk,D] -> [B,H,N,D]."""
+    B, H, Nq, D = q.shape
+    Hkv, Nk = k.shape[1], k.shape[2]
+    if Hkv != H:  # GQA: expand kv heads (kernel-side ragged grouping is a
+        rep = H // Hkv  # perf follow-up; wrapper keeps semantics exact)
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    out = _fa.flash_attention_fwd(
+        q.reshape(B * H, Nq, D), k.reshape(B * H, Nk, D),
+        v.reshape(B * H, Nk, D), causal=causal, window=window,
+        bq=bq, bk=bk, interpret=interpret)
+    return out.reshape(B, H, Nq, D)

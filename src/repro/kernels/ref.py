@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_fused_ref(x, w0, a, b, scale: float):
+    """y = x@W0 + s·(x@A)@B.  x:[M,K] w0:[K,N] a:[K,r] b:[r,N]."""
+    return (x @ w0 + scale * ((x @ a) @ b)).astype(x.dtype)
+
+
+def lora_dx_ref(g, w0, a, b, scale: float):
+    """dx = (s·g)@Bᵀ@Aᵀ + g@W0ᵀ (paper A.1 eq 13). g:[M,N]."""
+    dh = (scale * g) @ b.T
+    return (dh @ a.T + g @ w0.T).astype(g.dtype)
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return ((xf / rms) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_bwd_ref(x, w, g, eps: float = 1e-6):
+    """(dx, dw) — paper A.3 eq 22."""
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    xhat = xf / rms
+    dxhat = gf * w.astype(jnp.float32)
+    dx = (dxhat - xhat * jnp.mean(dxhat * xhat, -1, keepdims=True)) / rms
+    dw = jnp.sum(gf * xhat, axis=tuple(range(x.ndim - 1)))
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """Dense attention oracle. q:[B,H,Nq,D] k/v:[B,H,Nk,D] (heads equal)."""
+    B, H, Nq, D = q.shape
+    Nk = k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(D)
+    qpos = jnp.arange(Nq)[:, None]
+    kpos = jnp.arange(Nk)[None, :]
+    ok = jnp.ones((Nq, Nk), bool)
+    if causal:
+        ok &= qpos >= kpos
+    if window > 0:
+        ok &= qpos - kpos < window
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,80 @@
+"""Fused RMSNorm Pallas TPU kernels (forward + backward, paper A.3).
+
+Forward reads ``x`` once (single pass: square-mean, rsqrt, scale — no
+separate mean kernel); backward recomputes rms/xhat from the saved ``x``
+(the MeSP residual contract: residual = x only) and emits dx plus a
+per-row-block partial dw that the wrapper sum-reduces.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + eps)
+    o_ref[...] = (x * rms * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "bm", "interpret"))
+def rmsnorm(x, w, eps: float = 1e-6, *, bm: int = 256,
+            interpret: bool = False):
+    """x: [M, d]; w: [d]. Row-block grid; d stays whole in VMEM."""
+    M, d = x.shape
+    bm = min(bm, M)
+    assert M % bm == 0
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(M // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, d), x.dtype),
+        interpret=interpret,
+    )(x, w.reshape(1, d))
+
+
+def _rmsnorm_bwd_kernel(x_ref, w_ref, g_ref, dx_ref, dwp_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + eps)
+    xhat = x * rms
+    dxhat = g * w
+    dx = (dxhat - xhat * jnp.mean(dxhat * xhat, -1, keepdims=True)) * rms
+    dx_ref[...] = dx.astype(dx_ref.dtype)
+    dwp_ref[...] = jnp.sum(g * xhat, 0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "bm", "interpret"))
+def rmsnorm_bwd(x, w, g, eps: float = 1e-6, *, bm: int = 256,
+                interpret: bool = False):
+    """Returns (dx, dw). Per-block dw partials reduced by the wrapper."""
+    M, d = x.shape
+    bm = min(bm, M)
+    assert M % bm == 0
+    dx, dwp = pl.pallas_call(
+        functools.partial(_rmsnorm_bwd_kernel, eps=eps),
+        grid=(M // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, d), x.dtype),
+            jax.ShapeDtypeStruct((M // bm, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w.reshape(1, d), g)
+    return dx, jnp.sum(dwp, 0).astype(w.dtype)

@@ -1,0 +1,179 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This proves the distribution config is coherent without real hardware:
+``jax.jit(step).lower(**specs).compile()`` must succeed on the 16×16
+single-pod mesh AND the 2×16×16 multi-pod mesh for every assigned cell,
+and emits ``memory_analysis()`` / ``cost_analysis()`` + the roofline terms
+consumed by EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ASSIGNED, SHAPES, get_config, shape_applicable  # noqa: E402
+from repro.core import mesp  # noqa: E402
+from repro.launch import inputs as inp  # noqa: E402
+from repro.launch import sharding as sh  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as model_lib  # noqa: E402
+from repro.optim import sgd  # noqa: E402
+from repro.roofline import analyze  # noqa: E402
+
+
+def build_train_fn(cfg, mesh, global_batch):
+    """(train_step, in_shardings, out_shardings) for jit."""
+    opt = sgd(1e-4)
+    act = sh.activation_spec(mesh, global_batch)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = mesp.value_and_grad(params, cfg, batch, act_spec=act)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step, opt
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             mode: str = "structured", verbose: bool = True,
+             act_override=None):
+    """Lower + compile one cell. Returns a result dict (or skip record)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skip",
+                "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = mesh.size
+    t0 = time.monotonic()
+
+    pstruct = inp.param_struct(cfg)
+    pspecs = sh.param_specs(cfg, pstruct, mesh)
+    pshard = sh.named(mesh, pspecs)
+
+    with mesh:
+        if shape.kind in ("train", "prefill"):
+            batch_struct, batch_shard = inp.train_batch_specs(cfg, shape, mesh)
+            if shape.kind == "train":
+                step_fn, opt = build_train_fn(cfg, mesh, shape.global_batch)
+                ostruct = jax.eval_shape(opt.init, pstruct)
+                oshard = sh.named(mesh, sh.opt_specs(cfg, ostruct, mesh))
+                lowered = jax.jit(
+                    step_fn,
+                    in_shardings=(pshard, oshard, batch_shard),
+                    out_shardings=(pshard, oshard, NamedSharding(mesh, P())),
+                    donate_argnums=(0, 1),   # steady-state: update in place
+                ).lower(pstruct, ostruct, batch_struct)
+            else:  # prefill: forward pass producing logits
+                act = (sh.activation_spec(mesh, shape.global_batch)
+                       if act_override is None else act_override)
+
+                def fwd(params, batch):
+                    return model_lib.loss_fn(params, cfg, batch,
+                                             mode=mode, act_spec=act)
+
+                lowered = jax.jit(
+                    fwd,
+                    in_shardings=(pshard, batch_shard),
+                    out_shardings=NamedSharding(mesh, P()),
+                ).lower(pstruct, batch_struct)
+        else:  # decode
+            cache_struct, cache_shard, tok, tok_shard = \
+                inp.decode_input_specs(cfg, shape, mesh)
+
+            def serve_step(params, cache, tokens):
+                return model_lib.decode_step(params, cfg, cache, tokens)
+
+            bspec = sh.batch_spec(mesh, shape.global_batch)
+            bdim = bspec[0] if len(bspec) else None
+            vdim = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+            logits_shard = NamedSharding(mesh, P(bdim, None, vdim))
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(pshard, cache_shard, tok_shard),
+                out_shardings=(logits_shard, cache_shard),
+                donate_argnums=(1,),   # KV cache updates in place
+            ).lower(pstruct, cache_struct, tok)
+
+        compiled = lowered.compile()
+
+    ma = compiled.memory_analysis()
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_name}] memory_analysis:")
+        print(f"  {ma}")
+    report = analyze(cfg, shape, mesh_name, chips, compiled)
+    if verbose:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        print(f"  cost_analysis: flops={ca.get('flops', 0):.4g} "
+              f"bytes={ca.get('bytes accessed', 0):.4g}")
+        print(f"  roofline: compute={report.t_compute:.4g}s "
+              f"memory={report.t_memory:.4g}s "
+              f"collective={report.t_collective:.4g}s "
+              f"dominant={report.dominant} "
+              f"useful={report.useful_flops_ratio:.3f} "
+              f"frac={report.roofline_fraction:.3f}")
+    res = report.row()
+    res.update({"status": "ok", "compile_s": time.monotonic() - t0,
+                "coll_breakdown": report.coll_breakdown,
+                "memory_analysis": str(ma)})
+    return res
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    cells = []
+    archs = list(ASSIGNED) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    failed = 0
+    for arch in archs:
+        for shp in shapes:
+            for mp in meshes:
+                try:
+                    r = run_cell(arch, shp, multi_pod=mp)
+                except Exception as e:
+                    failed += 1
+                    r = {"arch": arch, "shape": shp,
+                         "mesh": "2x16x16" if mp else "16x16",
+                         "status": "FAIL", "error": f"{type(e).__name__}: {e}"}
+                    print(f"[{arch} × {shp}] FAILED: {r['error']}",
+                          file=sys.stderr)
+                results.append(r)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skip, {failed} FAIL "
+          f"of {len(results)} cells")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,69 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) cell.
+
+``input_specs`` returns weak-type-correct, shardable specs with NO device
+allocation — the dry-run lowers and compiles against these.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch import sharding as sh
+from repro.models import model as model_lib
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    """(batch ShapeDtypeStructs, batch NamedShardings) for a training step."""
+    B, N = shape.global_batch, shape.seq_len
+    bs = sh.batch_spec(mesh, B)
+    bdim = bs[0] if len(bs) else None
+    specs = {
+        "tokens": SDS((B, N), jnp.int32),
+        "labels": SDS((B, N), jnp.int32),
+    }
+    shards = {
+        "tokens": NamedSharding(mesh, P(bdim, None)),
+        "labels": NamedSharding(mesh, P(bdim, None)),
+    }
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.family == "vlm":
+        specs["frontend_embeds"] = SDS((B, cfg.frontend_tokens, cfg.d_model), dtype)
+        shards["frontend_embeds"] = NamedSharding(mesh, P(bdim, None, None))
+    if cfg.family == "audio":
+        specs["enc_frames"] = SDS((B, cfg.encdec.encoder_seq, cfg.d_model), dtype)
+        shards["enc_frames"] = NamedSharding(mesh, P(bdim, None, None))
+    return specs, shards
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    """(cache specs, cache shardings, token spec, token sharding).
+
+    ``decode_*``/``long_*`` shapes: one new token against a cache holding
+    ``seq_len`` previous positions.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    # pad the cache a divisibility-friendly amount past seq_len: the cache
+    # holds seq_len valid positions plus the newly decoded token
+    max_len = S + 256
+    cache = jax.eval_shape(lambda: model_lib.init_cache(cfg, B, max_len))
+    cache_specs = sh.cache_specs(cfg, cache, mesh, B)
+    cache_shards = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), cache_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    bs = sh.batch_spec(mesh, B)
+    bdim = bs[0] if len(bs) else None
+    tok = SDS((B, 1), jnp.int32)
+    tok_shard = NamedSharding(mesh, P(bdim, None))
+    return cache, cache_shards, tok, tok_shard
+
+
+def param_struct(cfg: ArchConfig):
+    """Abstract params (no allocation) via eval_shape on the initializer."""
+    return jax.eval_shape(
+        lambda: model_lib.init_params(jax.random.PRNGKey(0), cfg))

@@ -1,0 +1,214 @@
+"""Parameter & activation PartitionSpecs for the (pod, data, model) mesh.
+
+Megatron-style tensor parallelism on the ``model`` axis:
+  * column-parallel: q/k/v projections, MLP gate/up, embedding head
+  * row-parallel:    o projection, MLP down
+  * expert-parallel: MoE expert stacks sharded on their leading E dim
+  * LoRA factors: the factor dim touching a sharded weight dim is sharded the
+    same way; the rank dim (r ≤ 32) is always replicated.
+  * vocab-parallel embedding + logits.
+
+Activations: batch on ``(pod, data)``; between blocks the scan carry is
+additionally sequence-sharded on ``model`` (Megatron sequence parallelism) —
+without this, per-block input checkpoints of the largest archs exceed HBM
+(DESIGN.md §4, EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+# projections whose weight is column-parallel ([d_in, d_out·shard]) keyed by
+# their parent dict name; row-parallel analogously.
+_COL = {"q", "k", "v", "gate", "up", "x_proj", "gate_proj", "rg_w", "in_w",
+        "g", "w"}
+_ROW = {"o", "down", "out_proj"}
+# rwkv channel-mix reuses k/v/r names with different roles
+_CM_COL = {"k", "r"}
+_CM_ROW = {"v"}
+
+
+def _keys(path) -> list:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(p.key)
+        elif hasattr(p, "idx"):
+            out.append(p.idx)
+    return out
+
+
+def _trailing_spec(keys, leaf) -> Tuple:
+    last = keys[-1]
+    parent = keys[-2] if len(keys) >= 2 else None
+    in_moe = "moe" in keys
+    in_cm = "cm" in keys
+
+    if last == "tok":
+        return ("model", None)          # vocab-parallel embedding
+    if last == "head":
+        return (None, "model")          # vocab-parallel logits
+    if last == "router":
+        return (None, None)
+
+    if in_moe and last in ("w", "a", "b") and parent in ("gate", "up", "down") \
+            and hasattr(leaf, "ndim"):
+        return ("model", None, None)    # expert-parallel stacks [E, ·, ·]
+
+    col = (parent in _CM_COL) if in_cm else (parent in _COL)
+    row = (parent in _CM_ROW) if in_cm else (parent in _ROW)
+
+    if last == "w" and (col or row):
+        return (None, "model") if col else ("model", None)
+    if last == "a":                     # LoRA A: [d_in, r]
+        return ("model", None) if row else (None, None)
+    if last == "b":                     # LoRA B: [r, d_out]
+        return (None, "model") if col else (None, None)
+    if last == "bias":
+        return ("model",) if col else (None,)
+    # norms, token-shift mixes, decay vectors, conv weights, …: replicated
+    return tuple([None] * getattr(leaf, "ndim", 1))
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _guard(spec_dims, leaf, mesh: Optional[Mesh]):
+    """Drop axes whose size does not divide the corresponding dim (pjit
+    in_shardings require exact divisibility)."""
+    if mesh is None:
+        return spec_dims
+    shape = getattr(leaf, "shape", ())
+    out = []
+    for i, ax in enumerate(spec_dims):
+        if ax is not None and i < len(shape) and \
+                shape[i] % _axis_size(mesh, ax) != 0:
+            out.append(None)
+        else:
+            out.append(ax)
+    return tuple(out)
+
+
+def param_specs(cfg: ArchConfig, params, mesh: Optional[Mesh] = None) -> Any:
+    """PartitionSpec pytree matching ``params`` (handles stacked leading dims).
+
+    Pass ``mesh`` to drop shardings whose axis size doesn't divide the dim
+    (e.g. whisper's vocab 51865 on a 16-way model axis)."""
+    def one(path, leaf):
+        keys = _keys(path)
+        t = _trailing_spec(keys, leaf)
+        extra = leaf.ndim - len(t)
+        if extra < 0:  # vector param matched a matrix rule (defensive)
+            return P(*([None] * leaf.ndim))
+        return P(*_guard(tuple([None] * extra + list(t)), leaf, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_specs(cfg: ArchConfig, opt_state, mesh: Optional[Mesh] = None) -> Any:
+    """Optimizer state: scalars replicated; moment trees mirror param specs."""
+    def one(path, leaf):
+        if getattr(leaf, "ndim", 0) == 0:
+            return P()
+        keys = _keys(path)
+        t = _trailing_spec([k for k in keys if k not in ("m", "v")] or keys,
+                           leaf)
+        extra = leaf.ndim - len(t)
+        if extra < 0:
+            return P(*([None] * leaf.ndim))
+        return P(*_guard(tuple([None] * extra + list(t)), leaf, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, opt_state)
+
+
+def dp_axes(mesh: Mesh) -> Tuple:
+    """The composed data-parallel axes of a mesh: ('pod','data') or ('data',)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_spec(mesh: Mesh, global_batch: int) -> P:
+    """Shard batch over DP axes when divisible, else replicate (long-context
+    batch-1 decode shards the cache sequence dim instead)."""
+    dp = dp_axes(mesh)
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    if global_batch % size == 0 and global_batch >= size:
+        return P(dp)
+    return P()
+
+
+def cache_specs(cfg: ArchConfig, cache, mesh: Mesh, global_batch: int) -> Any:
+    """Decode-state sharding.
+
+    * batch on the DP axes when divisible;
+    * KV heads on ``model`` when divisible, else the cache **sequence** dim
+      takes ``model`` (sequence-parallel KV cache — the common case for GQA
+      archs with few KV heads on a 16-way model axis);
+    * batch-1 long-context decode puts the sequence dim on DP too.
+    """
+    dp = dp_axes(mesh)
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    batch_on_dp = global_batch % size == 0 and global_batch >= size
+    bspec = dp if batch_on_dp else None
+    heads_divisible = cfg.n_kv_heads % mesh.shape["model"] == 0
+    s_axes = []
+    if not batch_on_dp:
+        s_axes.extend(dp)
+    if not heads_divisible:
+        s_axes.append("model")
+    sspec = tuple(s_axes) if s_axes else None
+    hspec = "model" if heads_divisible else None
+
+    def one(path, leaf):
+        keys = _keys(path)
+        last = keys[-1]
+        nd = getattr(leaf, "ndim", 0)
+        if last in ("k", "v") and nd >= 4:
+            # [..., B, Hkv, S, D]
+            t = (bspec, hspec, sspec, None)
+        elif last == "wkv" and nd >= 4:
+            t = (bspec, "model", None, None)      # [B, H, D, D]
+        elif last in ("shift_tm", "shift_cm", "lru") and nd >= 2:
+            t = (bspec, "model")
+        elif last == "conv" and nd >= 3:
+            t = (bspec, None, "model")
+        elif last == "enc_out" and nd >= 3:
+            t = (bspec, None, None)
+        elif last == "len":
+            return P()
+        else:
+            return P(*([None] * nd))
+        extra = nd - len(t)
+        return P(*_guard(tuple([None] * extra + list(t)), leaf, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def activation_spec(mesh: Mesh, global_batch: int, *,
+                    seq_on_model: bool = True) -> P:
+    """Block-boundary activation sharding [B, N, d]: batch on DP axes and —
+    Megatron SP — sequence on model."""
+    b = batch_spec(mesh, global_batch)
+    bdim = b if len(b) else None
+    return P(bdim[0] if bdim else None, "model" if seq_on_model else None, None)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,1 @@
+from repro.models import griffin, layers, model, moe, rwkv6  # noqa: F401

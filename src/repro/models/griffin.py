@@ -1,0 +1,101 @@
+"""Griffin / RecurrentGemma blocks: RG-LRU recurrence + local attention
+[arXiv:2402.19427].
+
+The RG-LRU diagonal recurrence  h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ x_t)
+is computed with ``jax.lax.associative_scan`` (O(log N) depth — TPU-friendly,
+unlike a sequential per-token scan). Blocks follow the 2:1 (R,R,A) pattern.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+
+CONV_WIDTH = 4
+LRU_C = 8.0  # RG-LRU decay sharpness constant
+
+
+def recurrent_block_params(key, cfg: ArchConfig, *, lora: bool = True):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    w = cfg.hybrid.lru_width or d
+    tg = cfg.lora.targets
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "x_proj": layers.linear_params(ks[0], d, w, cfg, lora=lora and "q" in tg),
+        "gate_proj": layers.linear_params(ks[1], d, w, cfg, lora=lora and "gate" in tg),
+        "conv_w": jax.random.normal(ks[2], (CONV_WIDTH, w), dtype) * 0.1,
+        "conv_b": jnp.zeros((w,), dtype),
+        # RG-LRU gates
+        "rg_w": layers.linear_params(ks[3], w, w, cfg, lora=False),
+        "in_w": layers.linear_params(ks[4], w, w, cfg, lora=False),
+        "lam": jnp.full((w,), 2.0, dtype),  # Λ: softplus → decay rates
+        "out_proj": layers.linear_params(ks[5], w, d, cfg, lora=lora and "o" in tg),
+    }
+
+
+def _causal_conv(x, w, b, state: Optional[jax.Array]):
+    """Depthwise causal conv, width CONV_WIDTH. x: [B,N,W].
+
+    ``state``: [B, CONV_WIDTH-1, W] trailing inputs (decode). Returns
+    (y, new_state).
+    """
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (CONV_WIDTH - 1, 0), (0, 0)))
+        new_state = None
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xp[:, -(CONV_WIDTH - 1):]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(CONV_WIDTH))
+    return y + b, new_state
+
+
+def rg_lru(x, gates_r, gates_i, lam, state: Optional[jax.Array]):
+    """h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t ⊙ x_t);  log a_t = -c·softplus(Λ)·r_t.
+
+    x/gates: [B,N,W] (train/prefill) or [B,1,W] with ``state`` [B,W] (decode).
+    """
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(gates_r.astype(jnp.float32))
+    i = jax.nn.sigmoid(gates_i.astype(jnp.float32))
+    log_a = -LRU_C * jax.nn.softplus(lam.astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    if state is not None:
+        h = a[:, 0] * state + gated[:, 0]
+        return h[:, None].astype(x.dtype), h
+    # associative scan over time: (a, b) ∘ (a', b') = (a·a', a'·b + b')
+    def combine(u, v):
+        return (v[0] * u[0], v[0] * u[1] + v[1])
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(x.dtype), None
+
+
+def recurrent_block(p, x, cfg: ArchConfig, *, state=None, mode="structured"):
+    """Griffin recurrent block. state: {"conv": [B,3,W], "lru": [B,W]}."""
+    xin = layers.norm(p["ln"], x, cfg, mode=mode)
+    main = layers.apply_linear(p["x_proj"], xin, cfg, mode=mode)
+    gate = layers.act_gelu(
+        layers.apply_linear(p["gate_proj"], xin, cfg, mode=mode), mode)
+    conv_state = None if state is None else state["conv"]
+    main, conv_new = _causal_conv(main, p["conv_w"], p["conv_b"], conv_state)
+    gr = layers.apply_linear(p["rg_w"], main, cfg, mode=mode)
+    gi = layers.apply_linear(p["in_w"], main, cfg, mode=mode)
+    lru_state = None if state is None else state["lru"]
+    h, lru_new = rg_lru(main, gr, gi, p["lam"], lru_state)
+    y = layers.apply_linear(p["out_proj"], h * gate, cfg, mode=mode)
+    new_state = None if state is None else {"conv": conv_new, "lru": lru_new}
+    return x + y, new_state
+
+
+def make_recurrent_state(cfg: ArchConfig, batch: int, dtype) -> dict:
+    w = cfg.hybrid.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, w), dtype),
+        "lru": jnp.zeros((batch, w), jnp.float32),
+    }

@@ -1,0 +1,309 @@
+"""Shared model components (LoRA-adapted linears, attention, MLP, embeddings).
+
+All trainable-path ops route through ``repro.core.structured`` so that every
+backward pass in the framework is the paper's hand-derived one. Parameter
+pytrees are plain nested dicts; LoRA-adapted linears carry ``{"w", "a", "b"
+[, "bias"]}`` where ``w``/``bias`` are frozen and ``a``/``b`` are trainable.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import structured
+from repro.core.flash import flash_attention
+
+Array = jax.Array
+
+# Sequence length at/above which the flash (chunked) path is used; below it
+# the dense structured sdpa is cheaper (and easier to cross-check).
+FLASH_MIN_SEQ = 1024
+DEFAULT_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def _split(key, n):
+    return jax.random.split(key, n)
+
+
+def mesh_axis_size(axis) -> int:
+    """Size of a physical-mesh axis (or axis tuple) at trace time; 1 when no
+    mesh context is installed (unit tests)."""
+    if axis is None:
+        return 1
+    try:
+        from jax._src.mesh import thread_resources
+        mesh = thread_resources.env.physical_mesh
+        if mesh.empty:
+            return 1
+        if isinstance(axis, (tuple, list)):
+            n = 1
+            for a in axis:
+                n *= mesh.shape[a]
+            return n
+        return mesh.shape[axis]
+    except Exception:
+        return 1
+
+
+def _head_constrain(t, shard):
+    """[B, H, N, D] → heads on the model axis when divisible, batch on DP.
+    Keeps GSPMD from silently replicating k/v after the rope/transpose."""
+    if shard is None:
+        return t
+    from jax.sharding import PartitionSpec as P
+    msize = mesh_axis_size(shard["model"])
+    hspec = shard["model"] if (msize > 1 and t.shape[1] % msize == 0) else None
+    return jax.lax.with_sharding_constraint(
+        t, P(shard["dp"], hspec, None, None))
+
+
+def linear_params(key, d_in: int, d_out: int, cfg: ArchConfig, *,
+                  lora: bool, bias: bool = False, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    k_w, k_a = _split(key, 2)
+    p = {"w": (jax.random.normal(k_w, (d_in, d_out), dtype) * (d_in ** -0.5))}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    if lora:
+        r = cfg.lora.rank
+        p["a"] = jax.random.normal(k_a, (d_in, r), dtype) * (r ** -0.5)
+        p["b"] = jnp.zeros((r, d_out), dtype)  # B=0: ΔW starts at 0 (LoRA std)
+    return p
+
+
+def apply_linear(p, x, cfg: ArchConfig, *, mode: str = "structured"):
+    """LoRA linear. mode: "structured" (MeSP — h recomputed), "store_h"
+    (Table 5 ablation), "plain" (MeBP — framework autodiff)."""
+    bias = p.get("bias")
+    if "a" in p:
+        if mode == "plain":
+            y = x @ p["w"] + cfg.lora.scale * ((x @ p["a"]) @ p["b"])
+            return y + bias if bias is not None else y
+        fn = structured.lora_linear_store_h if mode == "store_h" \
+            else structured.lora_linear
+        return fn(x, p["w"], p["a"], p["b"], bias, cfg.lora.scale)
+    y = x @ p["w"]
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def norm(p, x, cfg: ArchConfig, *, mode: str = "structured"):
+    """RMSNorm: structured (residual = x, rms recomputed) or plain autodiff."""
+    if mode == "plain":
+        xf = x.astype(jnp.float32)
+        rms = jnp.sqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + cfg.norm_eps)
+        return ((xf / rms) * p.astype(jnp.float32)).astype(x.dtype)
+    return structured.rmsnorm(x, p, cfg.norm_eps)
+
+
+def act_silu(x, mode: str):
+    return x * jax.nn.sigmoid(x) if mode == "plain" else structured.silu(x)
+
+
+def act_gelu(x, mode: str):
+    return jax.nn.gelu(x, approximate=True) if mode == "plain" else structured.gelu(x)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [B, N, H, D] (D even), positions: [N] or [B, N]."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [*, N, half]
+    if ang.ndim == 2:  # [N, half] -> broadcast over batch
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (GQA + optional sliding window + KV cache)
+# ---------------------------------------------------------------------------
+
+
+def attention_params(key, cfg: ArchConfig, *, cross: bool = False,
+                     lora: bool = True):
+    ks = _split(key, 4)
+    hd = cfg.resolved_head_dim
+    tg = cfg.lora.targets
+    return {
+        "q": linear_params(ks[0], cfg.d_model, cfg.n_heads * hd, cfg,
+                           lora=lora and "q" in tg, bias=cfg.qkv_bias),
+        "k": linear_params(ks[1], cfg.d_model, cfg.n_kv_heads * hd, cfg,
+                           lora=lora and "k" in tg, bias=cfg.qkv_bias),
+        "v": linear_params(ks[2], cfg.d_model, cfg.n_kv_heads * hd, cfg,
+                           lora=lora and "v" in tg, bias=cfg.qkv_bias),
+        "o": linear_params(ks[3], cfg.n_heads * hd, cfg.d_model, cfg,
+                           lora=lora and "o" in tg),
+    }
+
+
+def attention(p, x, cfg: ArchConfig, *, window: int = 0, causal: bool = True,
+              cache: Optional[dict] = None, pos: Array | int = 0,
+              kv_x: Optional[Array] = None, use_rope: bool = True,
+              mode: str = "structured",
+              shard=None) -> Tuple[Array, Optional[dict]]:
+    """Multi-head attention with the structured backward.
+
+    ``cache`` (decode): {"k": [B,Hkv,S,D], "v": ..., "len": scalar int32}.
+    ``kv_x``: source for k/v (cross-attention) — defaults to x.
+    """
+    B, N, _ = x.shape
+    hd = cfg.resolved_head_dim
+    src = x if kv_x is None else kv_x
+    Nk = src.shape[1]
+
+    q = apply_linear(p["q"], x, cfg, mode=mode).reshape(B, N, cfg.n_heads, hd)
+    k = apply_linear(p["k"], src, cfg, mode=mode).reshape(B, Nk, cfg.n_kv_heads, hd)
+    v = apply_linear(p["v"], src, cfg, mode=mode).reshape(B, Nk, cfg.n_kv_heads, hd)
+
+    if use_rope:
+        qpos = jnp.arange(N) + pos
+        kpos = jnp.arange(Nk) + (pos if kv_x is None else 0)
+        q = rope(q, qpos, cfg.rope_theta)
+        k = rope(k, kpos, cfg.rope_theta)
+
+    q = _head_constrain(q.transpose(0, 2, 1, 3), shard)  # [B,H,N,D]
+    k = _head_constrain(k.transpose(0, 2, 1, 3), shard)
+    v = _head_constrain(v.transpose(0, 2, 1, 3), shard)
+
+    new_cache = None
+    if cache is not None:
+        if window > 0 and cache["k"].shape[2] == window:
+            # ring buffer: sliding-window layers keep only ``window`` slots
+            # (long_500k decode: 512× less cache for gemma3 local layers)
+            slot = cache["len"] % window
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 2)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 2)
+            new_cache = {"k": kc, "v": vc, "len": cache["len"] + N}
+            out = _ring_attend(q, kc, vc, cache["len"], window)
+        else:
+            # linear cache: append k/v at ``len`` and attend over valid slots
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k,
+                                                     cache["len"], 2)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v,
+                                                     cache["len"], 2)
+            new_cache = {"k": kc, "v": vc, "len": cache["len"] + N}
+            out = structured.sdpa(q, kc, vc, window, causal,
+                                  cache["len"], cache["len"] + N)
+    elif mode == "plain":
+        out = structured._sdpa_ref(q, k, v, window, causal, 0, None)
+    elif N >= FLASH_MIN_SEQ:
+        out = flash_attention(q, k, v, window, causal,
+                              DEFAULT_CHUNK, DEFAULT_CHUNK)
+    else:
+        out = structured.sdpa(q, k, v, window, causal)
+
+    out = out.transpose(0, 2, 1, 3).reshape(B, N, cfg.n_heads * hd)
+    return apply_linear(p["o"], out, cfg, mode=mode), new_cache
+
+
+def _ring_attend(q, kc, vc, qpos, window: int):
+    """Decode attention over a ring-buffer cache (keys roped at write time).
+
+    q: [B,H,1,D]; kc/vc: [B,Hkv,W,D]; slot s holds absolute position
+    p(s) = qpos − ((qpos − s) mod W), valid when 0 ≤ p(s) and p(s) > qpos−W.
+    """
+    B, H, _, D = q.shape
+    Hkv, W = kc.shape[1], kc.shape[2]
+    G = H // Hkv
+    slots = jnp.arange(W)
+    pos = qpos - jnp.mod(qpos - slots, W)
+    valid = (pos >= 0) & (pos > qpos - W) & (pos <= qpos)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q.reshape(B, Hkv, G, 1, D), kc,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(D)
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, -1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(vc.dtype), vc,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, 1, D).astype(q.dtype)
+
+
+def make_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype, *,
+                  window: int = 0) -> dict:
+    """KV cache; sliding-window layers get a ring buffer of ``window`` slots
+    when that is smaller than the full length."""
+    hd = cfg.resolved_head_dim
+    slots = window if (window and window < max_len) else max_len
+    return {
+        "k": jnp.zeros((batch, cfg.n_kv_heads, slots, hd), dtype),
+        "v": jnp.zeros((batch, cfg.n_kv_heads, slots, hd), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU) — LoRA on gate/up/down, SiLU via structured backward
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(key, cfg: ArchConfig, d_ff: Optional[int] = None, *,
+               act: str = "silu", lora: bool = True):
+    ks = _split(key, 3)
+    d_ff = d_ff or cfg.d_ff
+    tg = cfg.lora.targets
+    p = {
+        "gate": linear_params(ks[0], cfg.d_model, d_ff, cfg, lora=lora and "gate" in tg),
+        "up": linear_params(ks[1], cfg.d_model, d_ff, cfg, lora=lora and "up" in tg),
+        "down": linear_params(ks[2], d_ff, cfg.d_model, cfg, lora=lora and "down" in tg),
+    }
+    if act == "gelu":  # whisper: plain (non-gated) MLP, keep 'up/down' only
+        p = {
+            "up": linear_params(ks[1], cfg.d_model, d_ff, cfg, lora=lora and "up" in tg),
+            "down": linear_params(ks[2], d_ff, cfg.d_model, cfg, lora=lora and "down" in tg),
+        }
+    return p
+
+
+def mlp(p, x, cfg: ArchConfig, *, mode: str = "structured"):
+    if "gate" in p:
+        g = apply_linear(p["gate"], x, cfg, mode=mode)
+        u = apply_linear(p["up"], x, cfg, mode=mode)
+        return apply_linear(p["down"], act_silu(g, mode) * u, cfg, mode=mode)
+    u = apply_linear(p["up"], x, cfg, mode=mode)
+    return apply_linear(p["down"], act_gelu(u, mode), cfg, mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+
+def embed_params(key, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    k_e, k_h = _split(key, 2)
+    p = {"tok": jax.random.normal(k_e, (cfg.vocab, cfg.d_model), dtype) * 0.02}
+    if not cfg.tie_embeddings:
+        p["head"] = jax.random.normal(k_h, (cfg.d_model, cfg.vocab), dtype) \
+            * (cfg.d_model ** -0.5)
+    return p
+
+
+def embed(p, tokens, cfg: ArchConfig):
+    x = jnp.take(p["tok"], tokens, axis=0)
+    if cfg.name.startswith(("gemma", "recurrentgemma")):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)  # gemma convention
+    return x
+
+
+def unembed(p, x, cfg: ArchConfig):
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    return (x @ w).astype(jnp.float32)

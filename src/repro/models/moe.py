@@ -1,0 +1,173 @@
+"""Mixture-of-Experts MLP with grouped, EP-shardable dispatch.
+
+Dispatch is **grouped by sequence** (group = batch row, which is already
+data-parallel-sharded): routing, capacity assignment and the scatter into
+per-expert buffers are all per-group operations, so GSPMD keeps them on the
+data axis and inserts exactly one all-to-all pair per layer when the
+``[B, E, C, d]`` buffer is resharded to expert-parallel ``[E, B·C, d]``
+(experts on the ``model`` axis).
+
+(History: a first implementation used a *global* argsort-based dispatch —
+GSPMD cannot shard a global sort, so every device materialized the full
+[T·k, d] dispatch array and 64 GB all-reduces appeared per layer. See
+EXPERIMENTS.md §Perf iteration olmoe-1.)
+
+The expert FFN is a batched per-expert LoRA MLP whose backward is the
+paper's structured one (per-expert ``h = x@A`` recomputed, never stored).
+Capacity-dropped tokens contribute zero (residual passes through),
+Switch-style; capacity is per group: ``C = N·top_k/E · 1.25``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+
+CAPACITY_FACTOR = 1.25
+
+
+def moe_params(key, cfg: ArchConfig, *, lora: bool = True):
+    assert cfg.moe is not None
+    m = cfg.moe
+    ks = jax.random.split(key, 5)
+    dtype = jnp.dtype(cfg.dtype)
+    d, f, E = cfg.d_model, m.d_expert, m.n_experts
+    r = cfg.lora.rank
+    tg = cfg.lora.targets
+
+    def expert_stack(k, d_in, d_out, with_lora):
+        kw, ka = jax.random.split(k)
+        p = {"w": jax.random.normal(kw, (E, d_in, d_out), dtype) * (d_in ** -0.5)}
+        if with_lora:
+            p["a"] = jax.random.normal(ka, (E, d_in, r), dtype) * (r ** -0.5)
+            p["b"] = jnp.zeros((E, r, d_out), dtype)
+        return p
+
+    p = {
+        "router": jax.random.normal(ks[0], (d, E), dtype) * (d ** -0.5),
+        "gate": expert_stack(ks[1], d, f, lora and "gate" in tg),
+        "up": expert_stack(ks[2], d, f, lora and "up" in tg),
+        "down": expert_stack(ks[3], f, d, lora and "down" in tg),
+    }
+    if m.n_shared:
+        # shared experts fused into one dense gated MLP of width n_shared·f
+        p["shared"] = layers.mlp_params(ks[4], cfg, d_ff=m.n_shared * f, lora=lora)
+    return p
+
+
+def _capacity(n_per_group: int, m) -> int:
+    c = int(n_per_group * m.top_k / m.n_experts * CAPACITY_FACTOR)
+    return max(8, -(-c // 8) * 8)
+
+
+def _maybe_constrain(x, spec):
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def moe_mlp(p, x, cfg: ArchConfig, *, mode: str = "structured", shard=None):
+    """x: [B, N, d] -> [B, N, d].
+
+    ``shard``: optional dict {"dp": axes, "model": axis} enabling explicit
+    sharding constraints on the dispatch buffers (group dim on DP, expert
+    dim on model) — set by the production launchers, None in unit tests.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.core import structured
+
+    m = cfg.moe
+    B, N, d = x.shape
+    k = m.top_k
+    E = m.n_experts
+    # groups = (batch row × sequence shard): with the activations sharded
+    # P(dp, model, ·) between blocks, routing/capacity/scatter are then
+    # FULLY LOCAL to every device — zero collectives before the EP
+    # all-to-all (§Perf iteration olmoe-3)
+    sp = shard.get("sp", 1) if shard else 1
+    sp = sp if N % sp == 0 else 1
+    Ng = N // sp
+    C = _capacity(Ng, m)
+    xg = x.reshape(B, sp, Ng, d)
+
+    logits = (xg @ p["router"]).astype(jnp.float32)          # [B,sp,Ng,E]
+    weights, idx = jax.lax.top_k(jax.nn.softmax(logits, -1), k)
+    weights = (weights / jnp.sum(weights, -1, keepdims=True)).astype(x.dtype)
+
+    # --- per-group capacity assignment (no global sort) --------------------
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)         # [B,sp,Ng,k,E]
+    flat_oh = onehot.reshape(B, sp, Ng * k, E)
+    pos_in_e = jnp.cumsum(flat_oh, axis=2) - flat_oh         # exclusive cumsum
+    pos = jnp.sum(pos_in_e * flat_oh, -1).reshape(B, sp, Ng, k)
+    keep = pos < C
+    pos_c = jnp.clip(pos, 0, C - 1)
+
+    # --- scatter into [B, sp, E, C, d] (groups stay on (dp, model)) --------
+    vals = (xg[:, :, :, None, :] * keep[..., None].astype(x.dtype))
+    vals = vals.reshape(B, sp, Ng * k, d)
+    eid = idx.reshape(B, sp, Ng * k)
+    slot = pos_c.reshape(B, sp, Ng * k)
+
+    def scatter_group(v, e, s):
+        return jnp.zeros((E, C, d), x.dtype).at[e, s].add(v)
+
+    buf = jax.vmap(jax.vmap(scatter_group))(vals, eid, slot)  # [B,sp,E,C,d]
+    dp = shard["dp"] if shard else None
+    if shard:
+        buf = _maybe_constrain(buf, P(dp, shard["model"], None, None, None))
+
+    # --- reshard to expert-parallel and run the expert LoRA MLP ------------
+    ebuf = buf.transpose(2, 0, 1, 3, 4).reshape(E, B * sp * C, d)
+    if shard:
+        # expert dim on model, token rows on DP: one all-to-all pair/layer
+        ebuf = _maybe_constrain(ebuf, P(shard["model"], dp, None))
+
+    store_h = mode == "store_h"
+
+    def elin(q, z):
+        if "a" in q:
+            if mode == "plain":
+                return z @ q["w"] + cfg.lora.scale * ((z @ q["a"]) @ q["b"])
+            fn = structured.lora_linear_store_h if store_h \
+                else structured.lora_linear
+            return fn(z, q["w"], q["a"], q["b"], None, cfg.lora.scale)
+        return z @ q["w"]
+
+    hidden = layers.act_silu(elin(p["gate"], ebuf), mode) * elin(p["up"], ebuf)
+    y_ebuf = elin(p["down"], hidden)                         # [E, B·C, d]
+
+    # --- return path: reshard back to groups, gather, combine --------------
+    if shard:
+        y_ebuf = _maybe_constrain(y_ebuf, P(shard["model"], dp, None))
+    y_buf = y_ebuf.reshape(E, B, sp, C, d).transpose(1, 2, 0, 3, 4)
+    if shard:
+        y_buf = _maybe_constrain(y_buf,
+                                 P(dp, shard["model"], None, None, None))
+
+    def gather_group(yb, e, s):
+        return yb[e, s]                                      # [Ng·k, d]
+
+    out_slots = jax.vmap(jax.vmap(gather_group))(y_buf, eid, slot)
+    out_slots = out_slots.reshape(B, sp, Ng, k, d) * \
+        (weights * keep.astype(x.dtype))[..., None]
+    out = jnp.sum(out_slots, axis=3).reshape(B, N, d)
+
+    if "shared" in p:
+        out = out + layers.mlp(p["shared"], x, cfg, mode=mode)
+    return out
+
+
+def aux_load_balance_loss(p, x, cfg: ArchConfig):
+    """Switch-style load-balance auxiliary (exposed for training configs)."""
+    m = cfg.moe
+    T = x.shape[0] * x.shape[1]
+    logits = (x.reshape(T, -1) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    _, idx = jax.lax.top_k(probs, m.top_k)
+    frac = jnp.bincount(idx.reshape(-1), length=m.n_experts) / (T * m.top_k)
+    imp = jnp.mean(probs, 0)
+    return m.n_experts * jnp.sum(frac * imp)

@@ -1,0 +1,193 @@
+"""RWKV6 "Finch" time-mix / channel-mix (attention-free) [arXiv:2404.05892].
+
+The WKV recurrence  S_t = Diag(w_t)·S_{t-1} + k_tᵀ v_t,  y_t = r_t·S_{t-1}
++ (r_t·(u⊙k_t))·v_t  is computed in **chunkwise-parallel** form (intra-chunk
+matmuls on the MXU + inter-chunk [H, D, D] state carry), the TPU-idiomatic
+formulation — a sequential per-token scan would leave the MXU idle and make
+autodiff store O(N) states. Chunks are wrapped in ``jax.checkpoint`` so the
+backward recomputes intra-chunk tensors from chunk-boundary states only:
+the paper's block-sequential memory discipline applied along *time* instead
+of depth (DESIGN.md §5).
+
+Simplification vs the full Finch recipe: token-shift mixing coefficients are
+static vectors (no data-dependent ddlerp) — noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+
+WKV_CHUNK = 64
+
+
+def rwkv_block_params(key, cfg: ArchConfig, *, lora: bool = True):
+    ks = jax.random.split(key, 10)
+    d = cfg.d_model
+    tg = cfg.lora.targets
+    dtype = jnp.dtype(cfg.dtype)
+    H = cfg.n_heads
+    return {
+        "ln1": jnp.ones((d,), dtype),
+        "tm": {  # time-mix
+            "mu": 0.5 * jnp.ones((5, d), dtype),  # r,k,v,g,w shift mixes
+            "r": layers.linear_params(ks[0], d, d, cfg, lora=lora and "q" in tg),
+            "k": layers.linear_params(ks[1], d, d, cfg, lora=lora and "k" in tg),
+            "v": layers.linear_params(ks[2], d, d, cfg, lora=lora and "v" in tg),
+            "g": layers.linear_params(ks[3], d, d, cfg, lora=lora and "gate" in tg),
+            "w": layers.linear_params(ks[4], d, d, cfg, lora=False),  # decay proj
+            "w0": jnp.full((d,), -6.0, dtype),   # decay bias: slow default decay
+            "u": jax.random.normal(ks[5], (d,), dtype) * 0.1,  # bonus
+            "gn": jnp.ones((d,), dtype),         # per-head group norm weight
+            "o": layers.linear_params(ks[6], d, d, cfg, lora=lora and "o" in tg),
+        },
+        "ln2": jnp.ones((d,), dtype),
+        "cm": {  # channel-mix
+            "mu": 0.5 * jnp.ones((2, d), dtype),
+            "k": layers.linear_params(ks[7], d, cfg.d_ff, cfg, lora=lora and "up" in tg),
+            "v": layers.linear_params(ks[8], cfg.d_ff, d, cfg, lora=lora and "down" in tg),
+            "r": layers.linear_params(ks[9], d, d, cfg, lora=lora and "gate" in tg),
+        },
+    }
+
+
+def _token_shift(x, last: Optional[jax.Array]):
+    """x: [B,N,d] -> previous-token tensor. ``last``: [B,d] decode state."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return last[:, None, :]
+
+
+def wkv_chunked(r, k, v, logw, u, state):
+    """Chunkwise-parallel WKV.
+
+    r/k/v/logw: [B, N, H, D] (logw = log decay, negative), u: [H, D],
+    state: [B, H, D, D] (key-dim × value-dim). Returns (y, new_state).
+    """
+    B, N, H, D = r.shape
+    C = min(WKV_CHUNK, N)
+    pad = (-N) % C
+    if pad:
+        r, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (r, k, v))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    T = r.shape[1]
+    nc = T // C
+
+    def to_chunks(t):
+        return t.reshape(B, nc, C, H, D).transpose(1, 0, 3, 2, 4)  # [nc,B,H,C,D]
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, logw))
+
+    mask = jnp.tril(jnp.ones((C, C), jnp.float32), -1)  # strictly lower: j < i
+
+    @jax.checkpoint
+    def chunk(state, inp):
+        ri, ki, vi, wi = inp  # [B,H,C,D] each; fp32 inside
+        ri, ki, vi = ri.astype(jnp.float32), ki.astype(jnp.float32), vi.astype(jnp.float32)
+        wi = wi.astype(jnp.float32)
+        b = jnp.cumsum(wi, axis=2)                      # b_i = Σ_{j<=i} logw_j
+        q_dec = ri * jnp.exp(b - wi)                    # r_i ⊙ exp(b_{i-1})
+        k_dec = ki * jnp.exp(-b)                        # k_j ⊙ exp(-b_j)
+        # intra-chunk: A_ij = q_dec_i · k_dec_j for j<i, plus u-bonus diagonal
+        A = jnp.einsum("bhid,bhjd->bhij", q_dec, k_dec) * mask
+        diag = jnp.einsum("bhid,hd,bhid->bhi", ri, u.astype(jnp.float32), ki)
+        y = jnp.einsum("bhij,bhjd->bhid", A, vi) + diag[..., None] * vi
+        # inter-chunk: y_i += (r_i ⊙ exp(b_{i-1})) · S
+        y = y + jnp.einsum("bhid,bhdv->bhiv", q_dec, state)
+        # state' = Diag(exp(b_C)) S + Σ_j (k_j ⊙ exp(b_C − b_j))ᵀ v_j
+        bC = b[:, :, -1:, :]
+        state = state * jnp.exp(bC.squeeze(2))[..., None] + \
+            jnp.einsum("bhjd,bhjv->bhdv", ki * jnp.exp(bC - b), vi)
+        return state, y
+
+    # u broadcast per head-dim: reshape [H*D] weight vector to [H, D] outside.
+    state, ys = jax.lax.scan(chunk, state.astype(jnp.float32), (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, T, H, D)[:, :N]
+    return y, state
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """Single-token recurrence (decode). r/k/v/logw: [B,H,D]; u: [H,D]."""
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    y = jnp.einsum("bhd,bhdv->bhv", rf, state) + \
+        jnp.einsum("bhd,hd->bh", rf * kf,
+                   u.astype(jnp.float32))[..., None] * vf
+    state = state * jnp.exp(logw.astype(jnp.float32))[..., None] + \
+        jnp.einsum("bhd,bhv->bhdv", kf, vf)
+    return y, state
+
+
+def time_mix(p, x, cfg: ArchConfig, *, state=None, mode="structured"):
+    """x: [B,N,d]. state (decode): {"shift": [B,d], "wkv": [B,H,D,D]}."""
+    B, N, d = x.shape
+    H = cfg.n_heads
+    D = cfg.resolved_head_dim
+    xx = _token_shift(x, None if state is None else state["shift"])
+    mu = p["mu"]
+    mix = lambda i: x + (xx - x) * mu[i]
+    r = layers.apply_linear(p["r"], mix(0), cfg, mode=mode)
+    k = layers.apply_linear(p["k"], mix(1), cfg, mode=mode)
+    v = layers.apply_linear(p["v"], mix(2), cfg, mode=mode)
+    g = layers.act_silu(layers.apply_linear(p["g"], mix(3), cfg, mode=mode), mode)
+    logw = -jnp.exp((layers.apply_linear(p["w"], mix(4), cfg, mode=mode)
+                     + p["w0"]).astype(jnp.float32))
+
+    hd = lambda t: t.reshape(B, N, H, D)
+    u = p["u"].reshape(H, D)
+    if state is None:
+        y, _ = wkv_chunked(hd(r), hd(k), hd(v), hd(logw), u,
+                           jnp.zeros((B, H, D, D), jnp.float32))
+        new_state = None
+    else:
+        y1, wkv = wkv_step(hd(r)[:, 0], hd(k)[:, 0], hd(v)[:, 0],
+                           hd(logw)[:, 0], u, state["wkv"])
+        y = y1[:, None].reshape(B, N, H, D)
+        new_state = {"shift": x[:, -1], "wkv": wkv}
+    # per-head group norm then gate
+    yn = layers.norm(jnp.ones((D,), y.dtype), y.astype(x.dtype), cfg, mode=mode)
+    yn = (yn.reshape(B, N, d) * p["gn"]) * g
+    return layers.apply_linear(p["o"], yn, cfg, mode=mode), new_state
+
+
+def channel_mix(p, x, cfg: ArchConfig, *, state=None, mode="structured"):
+    xx = _token_shift(x, None if state is None else state)
+    mu = p["mu"]
+    xk = x + (xx - x) * mu[0]
+    xr = x + (xx - x) * mu[1]
+    kk = layers.apply_linear(p["k"], xk, cfg, mode=mode)
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = layers.apply_linear(p["v"], kk, cfg, mode=mode)
+    rr = jax.nn.sigmoid(layers.apply_linear(p["r"], xr, cfg, mode=mode))
+    new_state = None if state is None else x[:, -1]
+    return rr * vv, new_state
+
+
+def rwkv_block(p, x, cfg: ArchConfig, *, state=None, mode="structured"):
+    """Returns (x_out, new_state). state: {"shift_tm","wkv","shift_cm"}."""
+    tm_state = None if state is None else {"shift": state["shift_tm"],
+                                           "wkv": state["wkv"]}
+    h, tm_new = time_mix(p["tm"], layers.norm(p["ln1"], x, cfg, mode=mode),
+                         cfg, state=tm_state, mode=mode)
+    x = x + h
+    h, cm_new = channel_mix(p["cm"], layers.norm(p["ln2"], x, cfg, mode=mode),
+                            cfg, state=None if state is None else state["shift_cm"],
+                            mode=mode)
+    x = x + h
+    new_state = None
+    if state is not None:
+        new_state = {"shift_tm": tm_new["shift"], "wkv": tm_new["wkv"],
+                     "shift_cm": cm_new}
+    return x, new_state
+
+
+def make_rwkv_state(cfg: ArchConfig, batch: int, dtype) -> dict:
+    H, D = cfg.n_heads, cfg.resolved_head_dim
+    return {
+        "shift_tm": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, H, D, D), jnp.float32),
+        "shift_cm": jnp.zeros((batch, cfg.d_model), dtype),
+    }

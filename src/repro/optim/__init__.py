@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adamw, sgd, sgd_momentum, make_optimizer,
+)
+from repro.optim import compression, schedules  # noqa: F401

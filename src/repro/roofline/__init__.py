@@ -1,0 +1,3 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HW, RooflineReport, analyze, collective_bytes, model_flops,
+)

@@ -1,0 +1,53 @@
+"""Elastic scaling: re-shard a training job onto a different mesh.
+
+Checkpoints are mesh-agnostic (logical layout), so elasticity reduces to:
+(1) pick the new mesh from the surviving device set, (2) rebuild shardings
+from the same logical PartitionSpecs, (3) ``jax.device_put`` the restored
+arrays. ``reshard_tree`` also serves live resharding (no checkpoint round
+trip) when the runtime shrinks/grows within a job.
+
+The data pipeline re-slices by the new (host_index, host_count), and the
+global batch is kept constant by scaling per-host batch — the optimizer
+trajectory is unchanged across a resize (tested in tests/test_elastic.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_mesh_from_devices(devices: Sequence[jax.Device],
+                           model_parallel: int,
+                           pods: int = 1) -> Mesh:
+    """Build the largest (pod, data, model) mesh from a surviving device set."""
+    n = len(devices)
+    assert n % (model_parallel * pods) == 0, \
+        f"{n} devices not divisible by model={model_parallel} × pods={pods}"
+    data = n // (model_parallel * pods)
+    arr = np.asarray(devices[:pods * data * model_parallel]).reshape(
+        pods, data, model_parallel)
+    if pods == 1:
+        return Mesh(arr[0], ("data", "model"))
+    return Mesh(arr, ("pod", "data", "model"))
+
+
+def reshard_tree(tree, mesh: Mesh, specs):
+    """device_put every leaf onto (mesh, spec) — the elastic resize core."""
+    def put(leaf, spec):
+        if leaf is None:
+            return None
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(put, tree, specs,
+                                  is_leaf=lambda x: x is None)
+
+
+def rebalance_batch(global_batch: int, old_hosts: int, new_hosts: int) -> int:
+    """Per-host batch after a resize, keeping the global batch invariant."""
+    assert global_batch % new_hosts == 0, \
+        (f"global batch {global_batch} cannot be kept invariant over "
+         f"{new_hosts} hosts — choose a divisor count")
+    return global_batch // new_hosts

@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device; only the dry-run uses 512
+# placeholder devices (set inside launch/dryrun.py, NOT here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,103 @@
+"""Per-architecture smoke tests: REDUCED same-family configs run one
+forward/train step + decode steps on CPU, asserting shapes and finiteness.
+(The FULL configs are exercised via the dry-run only.)
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED, REGISTRY, SHAPES, get_config, \
+    shape_applicable
+from repro.core import mesp
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, N=16):
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, N), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "vlm":
+        batch["frontend_embeds"] = jnp.full(
+            (B, cfg.frontend_tokens, cfg.d_model), 0.01, jnp.float32)
+    if cfg.family == "audio":
+        batch["enc_frames"] = jnp.full(
+            (B, cfg.encdec.encoder_seq, cfg.d_model), 0.01, jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(KEY, cfg)
+    batch = _batch(cfg)
+    params2, loss = mesp.train_step(params, cfg, batch, 1e-2)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    for leaf in jax.tree_util.tree_leaves(params2):
+        assert bool(jnp.all(jnp.isfinite(leaf))), f"{arch}: NaN in params"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_forward_output_shape(arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(KEY, cfg)
+    batch = _batch(cfg)
+    logits = M.forward(params, cfg, batch["tokens"],
+                       frontend_embeds=batch.get("frontend_embeds"),
+                       enc_frames=batch.get("enc_frames"))
+    n_expected = batch["tokens"].shape[1] + (
+        cfg.frontend_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, n_expected, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_decode_steps(arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(KEY, cfg)
+    B = 2
+    cache = M.init_cache(cfg, B, 32)
+    if cfg.family == "audio":
+        cache["enc_out"] = jnp.full(
+            (B, cfg.encdec.encoder_seq, cfg.d_model), 0.01, jnp.float32)
+    tok = jnp.ones((B, 1), jnp.int32)
+    for _ in range(3):
+        logits, cache = M.decode_step(params, cfg, cache, tok)
+        assert logits.shape == (B, 1, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        tok = jnp.argmax(logits[:, :, :64], -1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_full_configs_match_assignment(arch):
+    """Full (non-reduced) config fields match the assignment table."""
+    cfg = REGISTRY[arch]
+    expected = {
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+        "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expected, f"{arch}: {got} != {expected}"
+
+
+def test_moe_configs():
+    o = REGISTRY["olmoe-1b-7b"].moe
+    assert (o.n_experts, o.top_k, o.n_shared) == (64, 8, 0)
+    d = REGISTRY["deepseek-moe-16b"].moe
+    assert (d.n_experts, d.top_k, d.n_shared) == (64, 6, 2)
+    assert d.first_layer_dense
+
+
+def test_long_context_applicability():
+    long = SHAPES["long_500k"]
+    runs = [a for a in ASSIGNED if shape_applicable(REGISTRY[a], long)[0]]
+    assert set(runs) == {"gemma3-12b", "rwkv6-1.6b", "recurrentgemma-2b"}
