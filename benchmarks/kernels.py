@@ -1,0 +1,163 @@
+"""Structured-vs-pallas kernel benchmark — tracks the kernel path's perf
+trajectory from the PR that wired it in.
+
+    PYTHONPATH=src python -m benchmarks.kernels [--steps 5] [--out PATH]
+
+Times one full MeSP train step per mode (``structured`` jnp custom_vjp rules
+vs ``pallas`` fused kernels) plus per-op microbenchmarks, and writes
+``benchmarks/results/BENCH_kernels.json``. On non-TPU backends the kernels
+run under the Pallas interpreter — those numbers track *correctness cost*
+only and are flagged ``interpret: true`` in the JSON; real speedups are a
+TPU measurement. With ``REPRO_AUTOTUNE=1`` the per-op section sweeps the
+autotuner's candidate block sizes and records the measured winners.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+DEFAULT_OUT = os.path.join(RESULTS_DIR, "BENCH_kernels.json")
+
+
+def _time(fn, *args, repeats=3):
+    fn(*args)  # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_train_step(steps: int):
+    """Per-step wall time of mesp.train_step for each mode."""
+    from repro.configs.base import ArchConfig
+    from repro.core import mesp
+
+    from repro.models import model as M
+
+    cfg = ArchConfig(name="bench-dense", family="dense", n_layers=2,
+                     d_model=256, n_heads=4, n_kv_heads=2, d_ff=512,
+                     vocab=512, dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 128), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+
+    out = {}
+    for mode in ("structured", "pallas"):
+        step = jax.jit(lambda p, b, m=mode: mesp.train_step(p, cfg, b, 1e-3,
+                                                            mode=m))
+        p, _ = step(params, batch)              # compile
+        jax.block_until_ready(p)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            p, loss = step(p, batch)
+        jax.block_until_ready(loss)
+        out[mode] = {"step_ms": (time.perf_counter() - t0) / steps * 1e3,
+                     "final_loss": float(loss)}
+    out["pallas_over_structured"] = (out["pallas"]["step_ms"] /
+                                     out["structured"]["step_ms"])
+    return out, {"arch": cfg.name, "d_model": cfg.d_model,
+                 "n_layers": cfg.n_layers, "seq": 128, "batch": 1}
+
+
+def bench_ops():
+    """Per-op micro timings: kernel vs the jnp path it replaces."""
+    from repro.core import structured
+    from repro.kernels import autotune, ops
+
+    interp = ops.pallas_interpret()
+    key = jax.random.PRNGKey(0)
+    M_, K, N, r = 512, 896, 896, 8
+    x = jax.random.normal(key, (M_, K)) * 0.3
+    w0 = jax.random.normal(key, (K, N)) * 0.05
+    a = jax.random.normal(key, (K, r)) * 0.3
+    b = jax.random.normal(key, (r, N)) * 0.3
+    g = jax.random.normal(key, (M_, N)) * 0.3
+    w = jax.random.normal(key, (K,))
+
+    out = {}
+    # LoRA linear fwd
+    f_pl = jax.jit(lambda x: ops.lora_linear(x, w0, a, b, None, 2.0))
+    f_jnp = jax.jit(lambda x: structured.lora_linear(x, w0, a, b, None, 2.0))
+    out["lora_fwd"] = {"pallas_ms": _time(f_pl, x) * 1e3,
+                       "structured_ms": _time(f_jnp, x) * 1e3}
+    # fused dA/dB vs three jnp matmuls
+    from repro.kernels.lora_fused import lora_dab
+    d_pl = jax.jit(lambda x, g: lora_dab(x, g, a, b, 2.0, interpret=interp))
+    d_jnp = jax.jit(lambda x, g: ((x).T @ ((2.0 * g) @ b.T),
+                                  (x @ a).T @ (2.0 * g)))
+    out["lora_dab"] = {"pallas_ms": _time(d_pl, x, g) * 1e3,
+                       "structured_ms": _time(d_jnp, x, g) * 1e3}
+    # rmsnorm fwd
+    n_pl = jax.jit(lambda x: ops.rmsnorm(x, w))
+    n_jnp = jax.jit(lambda x: structured.rmsnorm(x, w))
+    out["rmsnorm_fwd"] = {"pallas_ms": _time(n_pl, x) * 1e3,
+                          "structured_ms": _time(n_jnp, x) * 1e3}
+    # flash attention fwd+bwd
+    B, H, Hkv, Nq, D = 1, 4, 2, 512, 64
+    q = jax.random.normal(key, (B, H, Nq, D)) * 0.3
+    kk = jax.random.normal(key, (B, Hkv, Nq, D)) * 0.3
+    vv = jax.random.normal(key, (B, Hkv, Nq, D)) * 0.3
+    a_pl = jax.jit(jax.grad(lambda q: jnp.sum(
+        ops.flash_attention(q, kk, vv, True, 0, interp))))
+    a_jnp = jax.jit(jax.grad(lambda q: jnp.sum(
+        structured.sdpa(q, kk, vv, 0, True))))
+    out["attention_grad"] = {"pallas_ms": _time(a_pl, q) * 1e3,
+                             "structured_ms": _time(a_jnp, q) * 1e3}
+
+    if os.environ.get("REPRO_AUTOTUNE") == "1":
+        from repro.kernels.lora_fused import lora_fused
+        cands = [{"bm": bm, "bn": bn, "bk": bk}
+                 for bm in (128, 256) for bn in (128, 256)
+                 for bk in (128, 256)]
+        best = autotune.autotune(
+            "lora_fused",
+            lambda blk: lora_fused(x, w0, a, b, 2.0, interpret=interp, **blk),
+            candidates=cands, M=M_, K=K, N=N)
+        out["autotuned_lora_fused_blocks"] = best
+    return out
+
+
+def run_and_write(steps: int = 5, out: str = DEFAULT_OUT) -> dict:
+    """Run both sections, write the JSON artifact, return the result dict.
+    Single assembly point — benchmarks/run.py's ``kernels`` table calls this
+    too, so the checked-in artifact has one schema."""
+    from repro.kernels import ops
+    interp = ops.pallas_interpret()
+    step, shape = bench_train_step(steps)
+    per_op = bench_ops()
+    result = {
+        "backend": jax.default_backend(),
+        "interpret": interp,
+        "note": ("interpret mode: pallas numbers measure the emulation, "
+                 "not TPU perf") if interp else "compiled TPU kernels",
+        "shape": shape,
+        "train_step": step,
+        "per_op": per_op,
+    }
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1, sort_keys=True)
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+    result = run_and_write(args.steps, args.out)
+    print(json.dumps(result, indent=1, sort_keys=True))
+    print(f"# wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

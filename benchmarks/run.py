@@ -234,8 +234,26 @@ def figure2(steps: int = 300):
            f"{mezo_final:.3f} ({(mezo_final-mesp_final)/mesp_final:+.1%}).")
 
 
+# ---------------------------------------------------------------- kernels
+def kernels_bench(steps: int = 3):
+    """Structured vs pallas per-step timing -> BENCH_kernels.json (see
+    benchmarks/kernels.py; interpret-mode numbers off-TPU)."""
+    from benchmarks import kernels as K
+    result = K.run_and_write(steps)
+    step = result["train_step"]
+    report("\n## Kernels — structured vs pallas per step "
+           f"(backend={result['backend']}, interpret={result['interpret']})")
+    report("| path | step ms |")
+    report("|---|---|")
+    for mode in ("structured", "pallas"):
+        emit(f"kernels/{mode}/step_ms", f"{step[mode]['step_ms']:.2f}")
+        report(f"| {mode} | {step[mode]['step_ms']:.2f} |")
+    emit("kernels/pallas_over_structured",
+         f"{step['pallas_over_structured']:.3f}")
+
+
 TABLES = {"t1": table1, "t2": table2, "t3": table3, "t4": table4,
-          "t5": table5, "fig2": figure2}
+          "t5": table5, "fig2": figure2, "kernels": kernels_bench}
 
 
 def main(argv=None):

@@ -4,8 +4,10 @@ Two forms, both computing *mathematically identical* gradients:
 
 1. :func:`value_and_grad` — production engine. The model's scan-over-blocks
    already stores only block inputs (``jax.checkpoint`` per block) and every
-   inner op is a hand-derived ``custom_vjp`` (``core.structured``), so a
-   single ``jax.grad`` call executes exactly the paper's recompute schedule.
+   inner op is a hand-derived ``custom_vjp`` (``core.structured``; with
+   ``mode="pallas"`` the same rules fused into Pallas TPU kernels via
+   ``kernels.ops``), so a single ``jax.grad`` call executes exactly the
+   paper's recompute schedule.
    LoRA gradients are accumulated and applied once per step — for SGD this is
    identical to the paper's immediate per-block update because LoRA params are
    disjoint across blocks (verified in tests/test_mesp_equivalence.py).

@@ -1,12 +1,22 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
-* ``lora_fused``       — y = x@W0 + s·(x@A)@B with h kept in VMEM (fwd) and
-                         the fused dx backward (paper A.1).
+* ``lora_fused``       — y = x@W0 + s·(x@A)@B with h kept in VMEM (fwd), the
+                         fused dx backward, and the one-pass fused dA/dB
+                         backward with h recomputed tile-wise (paper A.1).
 * ``rmsnorm``          — fused forward / structured backward (paper A.3).
-* ``flash_attention``  — online-softmax forward (paper §2's recompute-over-
-                         store principle applied to attention).
+* ``flash_attention``  — online-softmax forward emitting per-row logsumexp +
+                         a backward that recomputes probabilities from it
+                         (paper §2's recompute-over-store principle). GQA is
+                         grouped via kernel index maps — K/V never repeated.
+* ``ops``              — the dispatch layer behind ``mode="pallas"``: per-op
+                         structured-jnp fallback on unsupported shapes,
+                         interpret mode off-TPU, block sizes from
+                         ``autotune`` (heuristic table + measured cache).
+* ``tiling``           — zero-pad/slice wrappers so arbitrary batch×seq and
+                         feature dims work (no divisibility requirements).
 
 Each kernel has a pure-jnp oracle in ``ref.py`` and a jit'd wrapper in
-``ops.py``; tests sweep shapes/dtypes in interpret mode against the oracles.
+``ops.py``; tests sweep shapes/dtypes in interpret mode against the oracles
+and against the structured custom_vjp rules.
 """
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import autotune, ops, ref, tiling  # noqa: F401

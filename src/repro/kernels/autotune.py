@@ -1,0 +1,163 @@
+"""Block-size selection for the Pallas kernels.
+
+Two layers:
+
+1. **Heuristic table** (:func:`choose_blocks`) — shape/dtype-keyed rules that
+   pick MXU-friendly block sizes without running anything. This is what the
+   dispatch layer (``ops.py``) uses by default; it is deterministic at trace
+   time so jit caches stay stable.
+2. **Measured autotune** (:func:`autotune`) — optional: time a candidate
+   sweep for an op instance and cache the winner, keyed by
+   ``(op, dims, dtype, backend)``. The cache is consulted by
+   :func:`choose_blocks` before the heuristics, and can be persisted to a
+   JSON file (``save_cache``/``load_cache``; ``REPRO_AUTOTUNE_CACHE`` names a
+   file to load at import). Benchmarks run it explicitly; training never
+   blocks on measurement.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tiling import ceil_to
+
+# key -> {"bm": ..., ...}
+_CACHE: Dict[str, Dict[str, int]] = {}
+
+
+def _key(op: str, dims: Dict[str, int], dtype) -> str:
+    d = "/".join(f"{k}={v}" for k, v in sorted(dims.items()))
+    return f"{op}|{d}|{jnp.dtype(dtype).name}|{jax.default_backend()}"
+
+
+# ---------------------------------------------------------------------------
+# heuristics
+# ---------------------------------------------------------------------------
+
+# Soft VMEM budget per resident block set (bytes). Real VMEM is ~16 MB/core;
+# leave room for double buffering and scratch.
+_VMEM_BUDGET = 4 << 20
+
+
+def _pick(n: int, tiers: Iterable[int]) -> int:
+    """Largest tier that n fills completely; 128 floor otherwise."""
+    for t in tiers:
+        if n >= t:
+            return t
+    return 128
+
+
+def _matmul_blocks(M: int, K: int, N: int, dtype) -> Dict[str, int]:
+    bm = _pick(M, (256,))
+    bn = _pick(N, (512, 256))
+    bk = _pick(K, (512, 256))
+    # shrink until x/w/acc blocks fit the soft budget
+    item = jnp.dtype(dtype).itemsize
+    while (bm * bk * item + bk * bn * item + bm * bn * 4) > _VMEM_BUDGET \
+            and max(bm, bn, bk) > 128:
+        if bk >= bn and bk > 128:
+            bk //= 2
+        elif bn > 128:
+            bn //= 2
+        else:
+            bm //= 2
+    return {"bm": bm, "bn": bn, "bk": bk}
+
+
+def _heuristic(op: str, dims: Dict[str, int], dtype) -> Dict[str, int]:
+    if op in ("lora_fused", "lora_dx"):
+        return _matmul_blocks(dims["M"], dims["K"], dims["N"], dtype)
+    if op == "lora_dab":
+        # grid is rows-only; x[bm,K] and g[bm,N] are both resident
+        item = jnp.dtype(dtype).itemsize
+        bm = _pick(dims["M"], (512, 256))
+        K, N = dims["K"], dims["N"]
+        while bm > 128 and bm * (ceil_to(K, 128) + ceil_to(N, 128)) * item \
+                > _VMEM_BUDGET:
+            bm //= 2
+        return {"bm": bm}
+    if op == "rmsnorm":
+        d = max(dims["d"], 1)
+        bm = _pick(dims["M"], (512, 256))
+        while bm > 128 and bm * d * 4 > _VMEM_BUDGET:
+            bm //= 2
+        return {"bm": bm}
+    if op == "flash":
+        D = dims.get("D", 128)
+        bq = _pick(dims["Nq"], (512, 256) if D <= 64 else (256,))
+        bk = _pick(dims["Nk"], (512, 256) if D <= 64 else (256,))
+        return {"bq": bq, "bk": bk}
+    raise ValueError(f"unknown op {op!r}")
+
+
+def choose_blocks(op: str, dtype=jnp.float32, **dims: int) -> Dict[str, int]:
+    """Measured-cache lookup, falling back to the heuristic table."""
+    hit = _CACHE.get(_key(op, dims, dtype))
+    if hit is not None:
+        return dict(hit)
+    return _heuristic(op, dims, dtype)
+
+
+# ---------------------------------------------------------------------------
+# measured autotune
+# ---------------------------------------------------------------------------
+
+
+def _time_once(fn: Callable[[], object]) -> float:
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+def autotune(op: str, run: Callable[[Dict[str, int]], object], *,
+             candidates: Iterable[Dict[str, int]],
+             dtype=jnp.float32, repeats: int = 3,
+             **dims: int) -> Dict[str, int]:
+    """Measure ``run(blocks)`` for each candidate, cache and return the best.
+
+    ``run`` must execute the kernel with the given block sizes and return a
+    JAX value (used for ``block_until_ready``). Candidates that fail to
+    compile/execute (e.g. VMEM overflow on real TPUs) are skipped.
+    """
+    best, best_t = None, float("inf")
+    for blocks in candidates:
+        try:
+            _time_once(lambda: run(blocks))          # compile + warm
+            t = min(_time_once(lambda: run(blocks)) for _ in range(repeats))
+        except Exception:
+            continue
+        if t < best_t:
+            best, best_t = dict(blocks), t
+    if best is None:
+        best = _heuristic(op, dims, dtype)
+    _CACHE[_key(op, dims, dtype)] = dict(best)
+    return best
+
+
+def load_cache(path: str) -> int:
+    """Merge a JSON cache file; returns number of entries loaded."""
+    with open(path) as f:
+        data = json.load(f)
+    _CACHE.update({k: {kk: int(vv) for kk, vv in v.items()}
+                   for k, v in data.items()})
+    return len(data)
+
+
+def save_cache(path: str) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(_CACHE, f, indent=1, sort_keys=True)
+
+
+_env_cache = os.environ.get("REPRO_AUTOTUNE_CACHE")
+if _env_cache and os.path.exists(_env_cache):
+    try:
+        load_cache(_env_cache)
+    except Exception:
+        pass

@@ -1,14 +1,26 @@
-"""FlashAttention forward Pallas TPU kernel (paper §2's recompute principle).
+"""FlashAttention Pallas TPU kernels (paper §2's recompute principle).
 
-Online-softmax over KV blocks with the running (m, l, acc) state in VMEM
-scratch; the [Nq, Nk] probability matrix never exists in HBM. Causal /
-sliding-window masking is positional (program-id based). The structured
-backward (``core/flash.py``) recomputes probabilities tile-wise from the
-saved logsumexp — on TPU the forward hot loop is this kernel; the backward
-reuses the XLA path (its tiles are already MXU-shaped).
+Forward: online-softmax over KV blocks with the running (m, l, acc) state in
+VMEM scratch; the [Nq, Nk] probability matrix never exists in HBM. The
+per-row logsumexp is emitted alongside the output so the backward pass can
+recompute probabilities tile-wise (``p = exp(s − lse)``) instead of saving
+them — the same residual contract as the jnp oracle in ``core/flash.py``.
 
-Grid: (B·H, Nq/bq, Nk/bk) with K innermost; accumulators persist across the
-K sweep and the output block is written on the last K step.
+Backward: two kernels factored by which operand stays resident —
+
+* ``_bwd_dq_kernel``  — grid (B·H, Nq/bq, Nk/bk), K innermost; dq accumulates
+  in VMEM scratch across the K sweep.
+* ``_bwd_dkv_kernel`` — grid (B·Hkv, Nk/bk, G·Nq/bq); a K/V block stays
+  resident while all G group members' q/g rows stream past it, so GQA
+  head-group reduction happens in VMEM (no H/Hkv-times K/V copy in HBM).
+
+GQA is expressed through BlockSpec index maps: q rows are laid out
+[B·H, Nq, D], k/v stay [B·Hkv, Nk, D], and the k/v index map divides the
+head program id by the group size — K/V are never repeated.
+
+Causal / sliding-window / padded-length masking is positional (program-id
+based); sequence lengths are zero-padded to the block grid and masked with
+the static true lengths.
 """
 from __future__ import annotations
 
@@ -19,12 +31,29 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tiling import block_for, pad_dim
+
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  causal: bool, window: int, bq: int, bk: int, n_k: int,
-                  scale: float):
+def _mask(q_pos, k_pos, *, causal: bool, window: int, nq: int, nk: int):
+    """Validity of (q, k) pairs incl. the padded-length guards."""
+    ok = (q_pos < nq) & (k_pos < nk)
+    if causal:
+        ok &= q_pos >= k_pos
+    if window > 0:
+        ok &= q_pos - k_pos < window
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref,
+                  *, causal: bool, window: int, bq: int, bk: int, n_k: int,
+                  nq_valid: int, nk_valid: int, scale: float):
     kj = pl.program_id(2)
 
     @pl.when(kj == 0)
@@ -40,11 +69,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     s = jax.lax.dot_general(
         q_ref[0], k_ref[0], (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale
-    ok = jnp.ones((bq, bk), jnp.bool_)
-    if causal:
-        ok &= q_pos >= k_pos
-    if window > 0:
-        ok &= q_pos - k_pos < window
+    ok = _mask(q_pos, k_pos, causal=causal, window=window,
+               nq=nq_valid, nk=nk_valid)
     s = jnp.where(ok, s, NEG_INF)
 
     m_prev = m_ref[...]
@@ -58,37 +84,221 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(kj == n_k - 1)
     def _finish():
-        o_ref[0] = (acc_ref[...] /
-                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lse_ref[0] = (m_ref[...] + jnp.log(l))[:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
-                                             "interpret"))
+                                             "q_per_kv", "interpret",
+                                             "return_lse"))
 def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
-                        bq: int = 512, bk: int = 512,
-                        interpret: bool = False):
-    """q/k/v: [BH, N, D] (heads pre-flattened, MHA) -> [BH, N, D]."""
+                        bq: int = 512, bk: int = 512, q_per_kv: int = 1,
+                        interpret: bool = False, return_lse: bool = False):
+    """q: [B·H, Nq, D]; k/v: [B·Hkv, Nk, D] with H = Hkv·q_per_kv.
+
+    Heads are pre-flattened; consecutive groups of ``q_per_kv`` q heads share
+    one kv head (the BlockSpec index map does the division — K/V are never
+    repeated). Any Nq/Nk (padded + masked). Returns out or (out, lse).
+    """
     BH, Nq, D = q.shape
     Nk = k.shape[1]
-    bq, bk = min(bq, Nq), min(bk, Nk)
-    assert Nq % bq == 0 and Nk % bk == 0
+    assert BH == k.shape[0] * q_per_kv, (BH, k.shape[0], q_per_kv)
+    bq, bk = block_for(Nq, bq), block_for(Nk, bk)
+    qp = pad_dim(q, bq, 1)
+    kp = pad_dim(k, bk, 1)
+    vp = pad_dim(v, bk, 1)
+    Nqp, Nkp = qp.shape[1], kp.shape[1]
     scale = float(1.0 / (D ** 0.5))
-    grid = (BH, Nq // bq, Nk // bk)
-    return pl.pallas_call(
+    G = q_per_kv
+    grid = (BH, Nqp // bq, Nkp // bk)
+    out, lse = pl.pallas_call(
         functools.partial(_flash_kernel, causal=causal, window=window,
-                          bq=bq, bk=bk, n_k=Nk // bk, scale=scale),
+                          bq=bq, bk=bk, n_k=Nkp // bk,
+                          nq_valid=Nq, nk_valid=Nk, scale=scale),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b // G, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b // G, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, Nq, D), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Nqp, D), q.dtype),
+            jax.ShapeDtypeStruct((BH, Nqp), jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),   # running max
             pltpu.VMEM((bq, 1), jnp.float32),   # running sum
             pltpu.VMEM((bq, D), jnp.float32),   # output accumulator
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(qp, kp, vp)
+    out = out[:, :Nq]
+    if return_lse:
+        return out, lse[:, :Nq]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# backward — probabilities recomputed from the saved logsumexp
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, g_ref, lse_ref, delta_ref, dq_ref,
+                   acc_ref, *, causal: bool, window: int, bq: int, bk: int,
+                   n_k: int, nq_valid: int, nk_valid: int, scale: float):
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qi = pl.program_id(1)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    qb, kb, vb, gb = q_ref[0], k_ref[0], v_ref[0], g_ref[0]
+    s = jax.lax.dot_general(qb, kb, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    ok = _mask(q_pos, k_pos, causal=causal, window=window,
+               nq=nq_valid, nk=nk_valid)
+    # p via saved lse; explicit zero on masked/padded entries (a fully-masked
+    # padded row has lse ≈ NEG_INF, where exp(s − lse) would blow up)
+    p = jnp.where(ok, jnp.exp(s - lse_ref[0][:, None]), 0.0)
+    dp = jax.lax.dot_general(gb, vb, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)     # eq 18
+    ds = p * (dp - delta_ref[0][:, None]) * scale                    # eq 19
+    acc_ref[...] += jax.lax.dot(ds.astype(qb.dtype), kb,
+                                preferred_element_type=jnp.float32)  # eq 20
+
+    @pl.when(kj == n_k - 1)
+    def _finish():
+        dq_ref[0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, g_ref, lse_ref, delta_ref, k_ref, v_ref,
+                    dk_ref, dv_ref, dk_acc, dv_acc, *, causal: bool,
+                    window: int, bq: int, bk: int, n_q: int, n_inner: int,
+                    nq_valid: int, nk_valid: int, scale: float):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    qi = jax.lax.rem(t, n_q)
+    kj = pl.program_id(1)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    qb, kb, vb, gb = q_ref[0], k_ref[0], v_ref[0], g_ref[0]
+    s = jax.lax.dot_general(qb, kb, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    ok = _mask(q_pos, k_pos, causal=causal, window=window,
+               nq=nq_valid, nk=nk_valid)
+    p = jnp.where(ok, jnp.exp(s - lse_ref[0][:, None]), 0.0)
+    pb = p.astype(qb.dtype)
+    # dv += pᵀ g  (eq 17, summed over the q heads of this kv group)
+    dv_acc[...] += jax.lax.dot_general(pb, gb, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(gb, vb, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)     # eq 18
+    ds = (p * (dp - delta_ref[0][:, None]) * scale).astype(qb.dtype)
+    # dk += dsᵀ q  (eq 21)
+    dk_acc[...] += jax.lax.dot_general(ds, qb, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+
+    @pl.when(t == n_inner - 1)
+    def _finish():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "q_per_kv", "interpret"))
+def flash_attention_bwd(q, k, v, out, lse, g, *, causal: bool = True,
+                        window: int = 0, bq: int = 512, bk: int = 512,
+                        q_per_kv: int = 1, interpret: bool = False):
+    """(dq, dk, dv) from the saved (out, lse) residuals.
+
+    q/g/out: [B·H, Nq, D]; k/v: [B·Hkv, Nk, D]; lse: [B·H, Nq] (f32).
+    dk/dv come back group-summed at kv-head layout [B·Hkv, Nk, D].
+    """
+    BH, Nq, D = q.shape
+    BHkv, Nk = k.shape[0], k.shape[1]
+    assert BH == BHkv * q_per_kv
+    bq, bk = block_for(Nq, bq), block_for(Nk, bk)
+    scale = float(1.0 / (D ** 0.5))
+    G = q_per_kv
+
+    # flash softmax correction term: delta_i = Σ_d g_i·out_i (A.2 eq 19's
+    # sum(dprobs ⊙ probs) in tile-local form) — one cheap rowwise reduction
+    delta = jnp.sum(g.astype(jnp.float32) * out.astype(jnp.float32), -1)
+
+    qp = pad_dim(q, bq, 1)
+    gp = pad_dim(g.astype(q.dtype), bq, 1)
+    lsep = pad_dim(lse, bq, 1)
+    deltap = pad_dim(delta, bq, 1)
+    kp = pad_dim(k, bk, 1)
+    vp = pad_dim(v, bk, 1)
+    Nqp, Nkp = qp.shape[1], kp.shape[1]
+    n_q, n_k = Nqp // bq, Nkp // bk
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, causal=causal, window=window,
+                          bq=bq, bk=bk, n_k=n_k,
+                          nq_valid=Nq, nk_valid=Nk, scale=scale),
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),      # q
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b // G, j, 0)),  # k
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b // G, j, 0)),  # v
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),      # g
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),            # lse
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),            # delta
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Nqp, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, D), jnp.float32)],
+        interpret=interpret,
+    )(qp, kp, vp, gp, lsep, deltap)
+
+    n_inner = G * n_q
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, causal=causal, window=window,
+                          bq=bq, bk=bk, n_q=n_q, n_inner=n_inner,
+                          nq_valid=Nq, nk_valid=Nk, scale=scale),
+        grid=(BHkv, n_k, n_inner),
+        in_specs=[
+            pl.BlockSpec((1, bq, D),
+                         lambda b, j, t: (b * G + t // n_q, t % n_q, 0)),  # q
+            pl.BlockSpec((1, bq, D),
+                         lambda b, j, t: (b * G + t // n_q, t % n_q, 0)),  # g
+            pl.BlockSpec((1, bq),
+                         lambda b, j, t: (b * G + t // n_q, t % n_q)),  # lse
+            pl.BlockSpec((1, bq),
+                         lambda b, j, t: (b * G + t // n_q, t % n_q)),  # delta
+            pl.BlockSpec((1, bk, D), lambda b, j, t: (b, j, 0)),        # k
+            pl.BlockSpec((1, bk, D), lambda b, j, t: (b, j, 0)),        # v
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, D), lambda b, j, t: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, j, t: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BHkv, Nkp, D), k.dtype),
+            jax.ShapeDtypeStruct((BHkv, Nkp, D), v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bk, D), jnp.float32),
+            pltpu.VMEM((bk, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, gp, lsep, deltap, kp, vp)
+
+    return dq[:, :Nq], dk[:, :Nk], dv[:, :Nk]

@@ -1,36 +1,69 @@
-"""Jit'd public wrappers over the Pallas kernels with shape plumbing and a
-custom_vjp that composes kernel forward passes with the paper's structured
-backward rules. On non-TPU backends pass ``interpret=True`` (tests do); the
-wrappers keep the same semantics as the pure-jnp oracles in ``ref.py``.
+"""Kernel dispatch layer: the single entry point for ``mode="pallas"``.
+
+``models/layers.py`` (and through it every model family, ``core/mesp.py``,
+``launch/train.py`` and the benchmarks) routes trainable-path ops here when
+the pallas mode is selected. Each public dispatcher:
+
+* checks :func:`*_supported` for the given operands and falls back to the
+  structured jnp path (``core/structured``) on unsupported shapes — per-op,
+  so e.g. MoE per-expert batched linears fall back while the attention in
+  the same block still runs the kernel;
+* picks block sizes from ``kernels/autotune.py`` (heuristic table, optionally
+  overridden by a measured cache);
+* runs the Pallas kernel with ``interpret=True`` automatically on non-TPU
+  backends (override with ``REPRO_PALLAS_INTERPRET=0/1``), so the same
+  training code runs on CPU tests and TPU production.
+
+The custom_vjps below compose the kernel forwards with kernel backwards that
+follow the paper's structured rules: ``h``/probabilities are *recomputed* in
+the backward (from ``x`` / the saved logsumexp), never stored.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import structured
+from repro.kernels import autotune
 from repro.kernels import lora_fused as _lf
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import flash_attention as _fa
+
+# Below this many query rows the dense structured sdpa beats the kernel's
+# padding + grid overhead (and is easier to cross-check).
+PALLAS_ATTN_MIN_SEQ = 64
 
 
 def _flat(x):
     return x.reshape(-1, x.shape[-1])
 
 
+def pallas_interpret() -> bool:
+    """True when kernels must run under the Pallas interpreter (non-TPU)."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
 # ---------------------------------------------------------------------------
-# LoRA linear: Pallas fwd (h in VMEM) + structured bwd (h recomputed; dx via
-# the fused dx kernel; dA/dB thin matmuls)
+# LoRA linear: Pallas fwd (h in VMEM) + Pallas bwd (h recomputed; dx via the
+# fused dx kernel; dA/dB via the fused one-pass dab kernel)
 # ---------------------------------------------------------------------------
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
 def lora_linear_kernel(x, w0, a, b, scale: float = 2.0,
                        interpret: bool = False):
-    """y = x@W0 + s·(x@A)@B with [..., K] inputs."""
+    """y = x@W0 + s·(x@A)@B with [..., K] inputs. Any shapes (padded)."""
     lead = x.shape[:-1]
-    y = _lf.lora_fused(_flat(x), w0, a, b, scale, interpret=interpret)
+    x2 = _flat(x)
+    blk = autotune.choose_blocks("lora_fused", x.dtype, M=x2.shape[0],
+                                 K=x2.shape[1], N=w0.shape[1])
+    y = _lf.lora_fused(x2, w0, a, b, scale, interpret=interpret, **blk)
     return y.reshape(*lead, w0.shape[1])
 
 
@@ -43,16 +76,36 @@ def _bwd(scale, interpret, res, g):
     lead = x.shape[:-1]
     g2 = _flat(g).astype(x.dtype)
     x2 = _flat(x)
-    dx = _lf.lora_dx(g2, w0, a, b, scale, interpret=interpret)
-    h = x2 @ a                                   # recomputed (paper §4.1)
-    db = h.T @ (scale * g2)
-    dh = (scale * g2) @ b.T
-    da = x2.T @ dh
-    return (dx.reshape(*lead, w0.shape[0]), jnp.zeros_like(w0),
-            da.astype(a.dtype), db.astype(b.dtype))
+    M, K = x2.shape
+    N = w0.shape[1]
+    dx = _lf.lora_dx(g2, w0, a, b, scale, interpret=interpret,
+                     **autotune.choose_blocks("lora_dx", x.dtype,
+                                              M=M, K=K, N=N))
+    # one fused pass over x/g: h recomputed tile-wise in VMEM (paper §4.1)
+    da, db = _lf.lora_dab(x2, g2, a, b, scale, interpret=interpret,
+                          **autotune.choose_blocks("lora_dab", x.dtype,
+                                                   M=M, K=K, N=N))
+    return (dx.reshape(*lead, w0.shape[0]), jnp.zeros_like(w0), da, db)
 
 
 lora_linear_kernel.defvjp(_fwd, _bwd)
+
+
+def lora_supported(x, w0) -> bool:
+    return x.ndim >= 2 and w0.ndim == 2
+
+
+def lora_linear(x, w0, a, b, bias=None, scale: float = 2.0, *,
+                interpret=None):
+    """Dispatch: Pallas LoRA linear, structured fallback on unsupported
+    shapes (e.g. MoE per-expert [E,·,·] weights)."""
+    if not lora_supported(x, w0):
+        return structured.lora_linear(x, w0, a, b, bias, scale)
+    if interpret is None:
+        interpret = pallas_interpret()
+    y = lora_linear_kernel(x, w0, a, b, scale, interpret)
+    # bias is frozen (no grad needed): a plain add stores no residuals
+    return y + bias if bias is not None else y
 
 
 # ---------------------------------------------------------------------------
@@ -62,8 +115,11 @@ lora_linear_kernel.defvjp(_fwd, _bwd)
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
 def rmsnorm_kernel(x, w, eps: float = 1e-6, interpret: bool = False):
-    lead = x.shape[:-1]
-    return _rn.rmsnorm(_flat(x), w, eps, interpret=interpret).reshape(x.shape)
+    x2 = _flat(x)
+    blk = autotune.choose_blocks("rmsnorm", x.dtype, M=x2.shape[0],
+                                 d=x2.shape[1])
+    return _rn.rmsnorm(x2, w, eps, interpret=interpret,
+                       **blk).reshape(x.shape)
 
 
 def _rn_fwd(x, w, eps, interpret):
@@ -72,30 +128,105 @@ def _rn_fwd(x, w, eps, interpret):
 
 def _rn_bwd(eps, interpret, res, g):
     x, w = res
-    dx, dw = _rn.rmsnorm_bwd(_flat(x), w, _flat(g), eps, interpret=interpret)
+    x2 = _flat(x)
+    blk = autotune.choose_blocks("rmsnorm", x.dtype, M=x2.shape[0],
+                                 d=x2.shape[1])
+    dx, dw = _rn.rmsnorm_bwd(x2, w, _flat(g), eps, interpret=interpret,
+                             **blk)
     return dx.reshape(x.shape), dw
 
 
 rmsnorm_kernel.defvjp(_rn_fwd, _rn_bwd)
 
 
+def rmsnorm(x, w, eps: float = 1e-6, *, interpret=None):
+    """Dispatch: fused RMSNorm kernel (any row count — rows padded)."""
+    if interpret is None:
+        interpret = pallas_interpret()
+    return rmsnorm_kernel(x, w, eps, interpret)
+
+
 # ---------------------------------------------------------------------------
-# Flash attention (forward kernel; GQA handled by head repeat in the wrapper)
+# Flash attention: Pallas fwd saving per-row logsumexp + Pallas bwd that
+# recomputes probabilities tile-wise from it. GQA grouped via index maps.
 # ---------------------------------------------------------------------------
+
+
+def _attn_blocks(Nq, Nk, D, dtype):
+    return autotune.choose_blocks("flash", dtype, Nq=Nq, Nk=Nk, D=D)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    interpret: bool = False):
+    """q: [B,H,N,D]; k/v: [B,Hkv,Nk,D] -> [B,H,N,D]. Differentiable."""
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, interpret)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, window, interpret):
+    B, H, Nq, D = q.shape
+    Hkv, Nk = k.shape[1], k.shape[2]
+    blk = _attn_blocks(Nq, Nk, D, q.dtype)
+    out, lse = _fa.flash_attention_fwd(
+        q.reshape(B * H, Nq, D), k.reshape(B * Hkv, Nk, D),
+        v.reshape(B * Hkv, Nk, D), causal=causal, window=window,
+        q_per_kv=H // Hkv, interpret=interpret, return_lse=True,
+        bq=blk["bq"], bk=blk["bk"])
+    return out.reshape(B, H, Nq, D), lse
+
+
+def _flash_vjp_fwd(q, k, v, causal, window, interpret):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, interpret)
+    # MeSP residual contract: (q, k, v, out, lse) — probs never stored
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(causal, window, interpret, res, g):
+    q, k, v, out, lse = res
+    B, H, Nq, D = q.shape
+    Hkv, Nk = k.shape[1], k.shape[2]
+    blk = _attn_blocks(Nq, Nk, D, q.dtype)
+    dq, dk, dv = _fa.flash_attention_bwd(
+        q.reshape(B * H, Nq, D), k.reshape(B * Hkv, Nk, D),
+        v.reshape(B * Hkv, Nk, D), out.reshape(B * H, Nq, D), lse,
+        g.reshape(B * H, Nq, D), causal=causal, window=window,
+        q_per_kv=H // Hkv, interpret=interpret,
+        bq=blk["bq"], bk=blk["bk"])
+    return (dq.reshape(B, H, Nq, D), dk.reshape(B, Hkv, Nk, D),
+            dv.reshape(B, Hkv, Nk, D))
+
+
+flash_attention.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def attention_supported(q, k) -> bool:
+    if q.ndim != 4 or k.ndim != 4:
+        return False
+    H, Hkv = q.shape[1], k.shape[1]
+    return Hkv >= 1 and H % Hkv == 0 and q.shape[2] >= PALLAS_ATTN_MIN_SEQ
+
+
+def sdpa(q, k, v, *, causal: bool = True, window: int = 0, interpret=None):
+    """Dispatch: flash kernel attention, structured sdpa fallback for short
+    sequences / unsupported layouts."""
+    if not attention_supported(q, k):
+        return structured.sdpa(q, k, v, window, causal)
+    if interpret is None:
+        interpret = pallas_interpret()
+    return flash_attention(q, k, v, causal, window, interpret)
 
 
 def flash_attention_kernel(q, k, v, *, causal: bool = True, window: int = 0,
                            bq: int = 512, bk: int = 512,
                            interpret: bool = False):
-    """q: [B,H,N,D]; k/v: [B,Hkv,Nk,D] -> [B,H,N,D]."""
+    """Forward-only kernel entry (benchmarks/tests). q: [B,H,N,D]; k/v:
+    [B,Hkv,Nk,D] -> [B,H,N,D]. GQA grouped via kernel index maps — K/V are
+    never repeated in HBM."""
     B, H, Nq, D = q.shape
     Hkv, Nk = k.shape[1], k.shape[2]
-    if Hkv != H:  # GQA: expand kv heads (kernel-side ragged grouping is a
-        rep = H // Hkv  # perf follow-up; wrapper keeps semantics exact)
-        k = jnp.repeat(k, rep, axis=1)
-        v = jnp.repeat(v, rep, axis=1)
     out = _fa.flash_attention_fwd(
-        q.reshape(B * H, Nq, D), k.reshape(B * H, Nk, D),
-        v.reshape(B * H, Nk, D), causal=causal, window=window,
-        bq=bq, bk=bk, interpret=interpret)
+        q.reshape(B * H, Nq, D), k.reshape(B * Hkv, Nk, D),
+        v.reshape(B * Hkv, Nk, D), causal=causal, window=window,
+        q_per_kv=H // Hkv, bq=bq, bk=bk, interpret=interpret)
     return out.reshape(B, H, Nq, D)

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiling import block_for, pad_dim
+
 
 def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
     x = x_ref[...].astype(jnp.float32)
@@ -23,21 +25,24 @@ def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
 @functools.partial(jax.jit, static_argnames=("eps", "bm", "interpret"))
 def rmsnorm(x, w, eps: float = 1e-6, *, bm: int = 256,
             interpret: bool = False):
-    """x: [M, d]; w: [d]. Row-block grid; d stays whole in VMEM."""
+    """x: [M, d]; w: [d]. Row-block grid (any M — rows padded); d stays
+    whole in VMEM. Padded rows normalize zeros (rsqrt(eps)) and are sliced."""
     M, d = x.shape
-    bm = min(bm, M)
-    assert M % bm == 0
-    return pl.pallas_call(
+    bm = block_for(M, bm)
+    xp = pad_dim(x, bm, 0)
+    Mp = xp.shape[0]
+    out = pl.pallas_call(
         functools.partial(_rmsnorm_kernel, eps=eps),
-        grid=(M // bm,),
+        grid=(Mp // bm,),
         in_specs=[
             pl.BlockSpec((bm, d), lambda i: (i, 0)),
             pl.BlockSpec((1, d), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((M, d), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((Mp, d), x.dtype),
         interpret=interpret,
-    )(x, w.reshape(1, d))
+    )(xp, w.reshape(1, d))
+    return out[:M]
 
 
 def _rmsnorm_bwd_kernel(x_ref, w_ref, g_ref, dx_ref, dwp_ref, *, eps: float):
@@ -55,13 +60,16 @@ def _rmsnorm_bwd_kernel(x_ref, w_ref, g_ref, dx_ref, dwp_ref, *, eps: float):
 @functools.partial(jax.jit, static_argnames=("eps", "bm", "interpret"))
 def rmsnorm_bwd(x, w, g, eps: float = 1e-6, *, bm: int = 256,
                 interpret: bool = False):
-    """Returns (dx, dw). Per-block dw partials reduced by the wrapper."""
+    """Returns (dx, dw). Per-block dw partials reduced by the wrapper.
+    Any M: padded rows carry g = 0, so they add nothing to dw."""
     M, d = x.shape
-    bm = min(bm, M)
-    assert M % bm == 0
+    bm = block_for(M, bm)
+    xp = pad_dim(x, bm, 0)
+    gp = pad_dim(g, bm, 0)
+    Mp = xp.shape[0]
     dx, dwp = pl.pallas_call(
         functools.partial(_rmsnorm_bwd_kernel, eps=eps),
-        grid=(M // bm,),
+        grid=(Mp // bm,),
         in_specs=[
             pl.BlockSpec((bm, d), lambda i: (i, 0)),
             pl.BlockSpec((1, d), lambda i: (0, 0)),
@@ -72,9 +80,9 @@ def rmsnorm_bwd(x, w, g, eps: float = 1e-6, *, bm: int = 256,
             pl.BlockSpec((1, d), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((M, d), x.dtype),
-            jax.ShapeDtypeStruct((M // bm, d), jnp.float32),
+            jax.ShapeDtypeStruct((Mp, d), x.dtype),
+            jax.ShapeDtypeStruct((Mp // bm, d), jnp.float32),
         ],
         interpret=interpret,
-    )(x, w.reshape(1, d), g)
-    return dx, jnp.sum(dwp, 0).astype(w.dtype)
+    )(xp, w.reshape(1, d), gp)
+    return dx[:M], jnp.sum(dwp, 0).astype(w.dtype)

@@ -1,0 +1,41 @@
+"""Shape padding helpers shared by the Pallas kernel wrappers.
+
+The kernels tile their grids in fixed block sizes; real models have
+``batch×seq`` and feature dims that are not multiples of those blocks
+(e.g. vocab 51865, reduced d_model 160). Every kernel wrapper zero-pads its
+operands up to the block grid and slices the result back — zero rows/cols
+are constructed so they contribute exactly nothing to the unpadded outputs
+(matmuls with zero rows, attention keys masked by a static valid-length).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Block-size alignment for single-block (dim < block) cases. Kernel block
+# dims land on the MXU/lane axis in at least one operand (e.g. bk is x's
+# lane dim but w0's sublane dim), so every block dim is kept a multiple of
+# the 128 lane width — the contract the kernels were designed around. The
+# interpreter doesn't care; real Mosaic does.
+LANE = 128
+
+
+def ceil_to(n: int, mult: int) -> int:
+    """Smallest multiple of ``mult`` that is >= n."""
+    return -(-n // mult) * mult
+
+
+def block_for(n: int, blk: int, align: int = LANE) -> int:
+    """Clamp a requested block size to dim ``n``: full blocks when n >= blk,
+    otherwise one aligned block covering the whole (padded) dim."""
+    return blk if n >= blk else ceil_to(n, align)
+
+
+def pad_dim(x, mult: int, axis: int):
+    """Zero-pad ``axis`` of x up to a multiple of ``mult``."""
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)

@@ -39,7 +39,7 @@ def build_step(cfg, engine: str, opt, act_spec=None):
             return params, opt_state, loss
         return step
 
-    mode = {"mesp": "structured", "mebp": "plain",
+    mode = {"mesp": "structured", "mesp_pallas": "pallas", "mebp": "plain",
             "store_h": "store_h"}[engine]
 
     def step(params, opt_state, batch):
@@ -57,7 +57,10 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true",
                     help="use the tiny same-family config (CPU-runnable)")
     ap.add_argument("--engine", default="mesp",
-                    choices=["mesp", "mebp", "mezo", "store_h"])
+                    choices=["mesp", "mesp_pallas", "mebp", "mezo",
+                             "store_h"],
+                    help="mesp_pallas = MeSP with the fused Pallas kernel "
+                         "path (interpret mode off-TPU)")
     ap.add_argument("--optimizer", default="sgd",
                     choices=["sgd", "sgd_momentum", "adamw"])
     ap.add_argument("--lr", type=float, default=1e-4)

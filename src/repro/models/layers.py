@@ -1,9 +1,12 @@
 """Shared model components (LoRA-adapted linears, attention, MLP, embeddings).
 
 All trainable-path ops route through ``repro.core.structured`` so that every
-backward pass in the framework is the paper's hand-derived one. Parameter
-pytrees are plain nested dicts; LoRA-adapted linears carry ``{"w", "a", "b"
-[, "bias"]}`` where ``w``/``bias`` are frozen and ``a``/``b`` are trainable.
+backward pass in the framework is the paper's hand-derived one; with
+``mode="pallas"`` they route through the fused Pallas kernels instead
+(``repro.kernels.ops`` — same structured math, per-op fallback to the jnp
+path on unsupported shapes). Parameter pytrees are plain nested dicts;
+LoRA-adapted linears carry ``{"w", "a", "b" [, "bias"]}`` where
+``w``/``bias`` are frozen and ``a``/``b`` are trainable.
 """
 from __future__ import annotations
 
@@ -15,6 +18,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core import structured
 from repro.core.flash import flash_attention
+from repro.kernels import ops as kops
 
 Array = jax.Array
 
@@ -80,13 +84,17 @@ def linear_params(key, d_in: int, d_out: int, cfg: ArchConfig, *,
 
 
 def apply_linear(p, x, cfg: ArchConfig, *, mode: str = "structured"):
-    """LoRA linear. mode: "structured" (MeSP — h recomputed), "store_h"
-    (Table 5 ablation), "plain" (MeBP — framework autodiff)."""
+    """LoRA linear. mode: "structured" (MeSP — h recomputed), "pallas"
+    (MeSP via fused TPU kernels), "store_h" (Table 5 ablation), "plain"
+    (MeBP — framework autodiff)."""
     bias = p.get("bias")
     if "a" in p:
         if mode == "plain":
             y = x @ p["w"] + cfg.lora.scale * ((x @ p["a"]) @ p["b"])
             return y + bias if bias is not None else y
+        if mode == "pallas":
+            return kops.lora_linear(x, p["w"], p["a"], p["b"], bias,
+                                    cfg.lora.scale)
         fn = structured.lora_linear_store_h if mode == "store_h" \
             else structured.lora_linear
         return fn(x, p["w"], p["a"], p["b"], bias, cfg.lora.scale)
@@ -97,11 +105,14 @@ def apply_linear(p, x, cfg: ArchConfig, *, mode: str = "structured"):
 
 
 def norm(p, x, cfg: ArchConfig, *, mode: str = "structured"):
-    """RMSNorm: structured (residual = x, rms recomputed) or plain autodiff."""
+    """RMSNorm: structured (residual = x, rms recomputed), pallas (fused
+    kernel, same residual contract) or plain autodiff."""
     if mode == "plain":
         xf = x.astype(jnp.float32)
         rms = jnp.sqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + cfg.norm_eps)
         return ((xf / rms) * p.astype(jnp.float32)).astype(x.dtype)
+    if mode == "pallas":
+        return kops.rmsnorm(x, p, cfg.norm_eps)
     return structured.rmsnorm(x, p, cfg.norm_eps)
 
 
@@ -206,6 +217,10 @@ def attention(p, x, cfg: ArchConfig, *, window: int = 0, causal: bool = True,
                                   cache["len"], cache["len"] + N)
     elif mode == "plain":
         out = structured._sdpa_ref(q, k, v, window, causal, 0, None)
+    elif mode == "pallas":
+        # kernel flash attention (fwd + lse-driven bwd); falls back to the
+        # structured sdpa for short sequences / unsupported layouts
+        out = kops.sdpa(q, k, v, causal=causal, window=window)
     elif N >= FLASH_MIN_SEQ:
         out = flash_attention(q, k, v, window, causal,
                               DEFAULT_CHUNK, DEFAULT_CHUNK)

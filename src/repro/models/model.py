@@ -10,8 +10,10 @@ Layout conventions
   *groups* (one pattern period, params ``[n_groups, ...]``) so per-layer
   window sizes / block kinds stay static inside the group body.
 * ``mode`` selects the backward regime: "structured" (MeSP, hand-derived
-  custom_vjp rules), "plain" (MeBP, framework autodiff), "store_h"
-  (paper Table 5 ablation).
+  custom_vjp rules), "pallas" (MeSP via the fused TPU kernels in
+  ``repro.kernels`` — same structured math, per-op fallback to the jnp path
+  on unsupported shapes/backends; interpret mode off-TPU), "plain" (MeBP,
+  framework autodiff), "store_h" (paper Table 5 ablation).
 """
 from __future__ import annotations
 
@@ -26,6 +28,9 @@ from repro.core import structured
 from repro.models import griffin, layers, moe as moe_lib, rwkv6
 
 Array = jax.Array
+
+#: valid ``mode`` values accepted throughout the model stack
+MODES = ("structured", "pallas", "plain", "store_h")
 
 
 # ---------------------------------------------------------------------------
@@ -240,6 +245,8 @@ def forward(params, cfg: ArchConfig, tokens: Array, *,
             enc_frames: Optional[Array] = None,
             act_spec=None) -> Array:
     """Full-sequence forward -> logits [B, N(+frontend), vocab] (fp32)."""
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
     x = layers.embed(params["embed"], tokens, cfg)
     if frontend_embeds is not None:  # vlm: precomputed patch embeddings
         x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)

@@ -1,13 +1,16 @@
-"""Per-kernel validation: shape/dtype sweeps in interpret mode vs ref.py."""
+"""Per-kernel validation: shape/dtype sweeps in interpret mode vs ref.py.
+Non-block-aligned shapes exercise the padding wrappers (tiling.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import structured
 from repro.kernels import ops, ref
-from repro.kernels.lora_fused import lora_dx, lora_fused
+from repro.kernels.lora_fused import lora_dab, lora_dx, lora_fused
 from repro.kernels.rmsnorm import rmsnorm, rmsnorm_bwd
-from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention import (flash_attention_bwd,
+                                           flash_attention_fwd)
 
 I = dict(interpret=True)
 
@@ -21,7 +24,9 @@ def _r(shape, seed, dtype=jnp.float32, scale=0.3):
                                        (jnp.bfloat16, 5e-2)])
 @pytest.mark.parametrize("M,K,N,r", [(128, 128, 128, 8),
                                      (256, 384, 128, 16),
-                                     (128, 256, 512, 4)])
+                                     (128, 256, 512, 4),
+                                     (96, 160, 112, 8),    # nothing aligned
+                                     (1, 160, 7, 4)])      # degenerate rows
 def test_lora_fused_sweep(M, K, N, r, dtype, tol):
     x, w0 = _r((M, K), 0, dtype), _r((K, N), 1, dtype, 0.05)
     a, b = _r((K, r), 2, dtype), _r((r, N), 3, dtype)
@@ -32,12 +37,26 @@ def test_lora_fused_sweep(M, K, N, r, dtype, tol):
                                rtol=tol, atol=tol)
 
 
-@pytest.mark.parametrize("M,K,N,r", [(128, 128, 128, 8), (128, 384, 256, 16)])
+@pytest.mark.parametrize("M,K,N,r", [(128, 128, 128, 8), (128, 384, 256, 16),
+                                     (96, 160, 112, 8)])
 def test_lora_dx_sweep(M, K, N, r):
     g, w0 = _r((M, N), 0), _r((K, N), 1, scale=0.05)
     a, b = _r((K, r), 2), _r((r, N), 3)
     dx = lora_dx(g, w0, a, b, 2.0, **I)
     np.testing.assert_allclose(dx, ref.lora_dx_ref(g, w0, a, b, 2.0),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("M,K,N,r", [(256, 128, 128, 8), (96, 160, 112, 8),
+                                     (300, 384, 256, 16)])
+def test_lora_dab_fused(M, K, N, r):
+    """One-pass dA/dB == the A.1 eq 10/12 contractions (h recomputed)."""
+    x, g = _r((M, K), 0), _r((M, N), 1)
+    a, b = _r((K, r), 2), _r((r, N), 3)
+    da, db = lora_dab(x, g, a, b, 2.0, bm=128, **I)
+    dh = (2.0 * g) @ b.T
+    np.testing.assert_allclose(da, x.T @ dh, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(db, (x @ a).T @ (2.0 * g),
                                rtol=2e-5, atol=2e-5)
 
 
@@ -58,7 +77,7 @@ def test_lora_kernel_vjp_matches_structured():
 
 @pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
                                        (jnp.bfloat16, 3e-2)])
-@pytest.mark.parametrize("M,d", [(256, 128), (512, 384)])
+@pytest.mark.parametrize("M,d", [(256, 128), (512, 384), (100, 160)])
 def test_rmsnorm_sweep(M, d, dtype, tol):
     x, w = _r((M, d), 0, dtype, 2.0), _r((d,), 1, dtype, 1.0)
     y = rmsnorm(x, w, 1e-6, **I)
@@ -67,9 +86,9 @@ def test_rmsnorm_sweep(M, d, dtype, tol):
                                rtol=tol, atol=tol)
 
 
-def test_rmsnorm_bwd():
-    x, w, g = _r((256, 128), 0, scale=2.0), _r((128,), 1, scale=1.0), \
-        _r((256, 128), 2)
+@pytest.mark.parametrize("M,d", [(256, 128), (100, 160)])
+def test_rmsnorm_bwd(M, d):
+    x, w, g = _r((M, d), 0, scale=2.0), _r((d,), 1, scale=1.0), _r((M, d), 2)
     dx, dw = rmsnorm_bwd(x, w, g, 1e-6, **I)
     dx_r, dw_r = ref.rmsnorm_bwd_ref(x, w, g)
     np.testing.assert_allclose(dx, dx_r, rtol=2e-5, atol=2e-5)
@@ -79,8 +98,9 @@ def test_rmsnorm_bwd():
 @pytest.mark.parametrize("causal,window", [(True, 0), (True, 128), (False, 0)])
 @pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
                                        (jnp.bfloat16, 3e-2)])
-def test_flash_kernel_sweep(causal, window, dtype, tol):
-    BH, N, D = 4, 256, 64
+@pytest.mark.parametrize("N", [256, 200])   # 200: padded + masked tail
+def test_flash_kernel_sweep(N, causal, window, dtype, tol):
+    BH, D = 4, 64
     q, k, v = _r((BH, N, D), 0, dtype), _r((BH, N, D), 1, dtype), \
         _r((BH, N, D), 2, dtype)
     o = flash_attention_fwd(q, k, v, causal=causal, window=window,
@@ -92,7 +112,21 @@ def test_flash_kernel_sweep(causal, window, dtype, tol):
                                rtol=tol, atol=tol)
 
 
+def test_flash_fwd_lse_matches_oracle():
+    """The saved per-row logsumexp must equal core/flash.py's (it drives the
+    backward's probability recompute)."""
+    from repro.core import flash as flash_ref
+    BH, N, D = 2, 192, 32
+    q, k, v = _r((BH, N, D), 0), _r((BH, N, D), 1), _r((BH, N, D), 2)
+    _, lse = flash_attention_fwd(q, k, v, causal=True, bq=128, bk=128,
+                                 return_lse=True, **I)
+    _, lse_ref = flash_ref._fwd_impl(q[None, :, None], k[None], v[None],
+                                     0, True, 128, 128)
+    np.testing.assert_allclose(lse, lse_ref[0, :, 0], rtol=1e-5, atol=1e-5)
+
+
 def test_flash_kernel_gqa_wrapper():
+    """GQA via kernel index maps (no jnp.repeat of K/V in HBM)."""
     B, H, Hkv, N, D = 2, 8, 2, 128, 32
     q = _r((B, H, N, D), 0)
     k, v = _r((B, Hkv, N, D), 1), _r((B, Hkv, N, D), 2)
@@ -101,3 +135,37 @@ def test_flash_kernel_gqa_wrapper():
     vr = jnp.repeat(v, H // Hkv, 1)
     oref = ref.flash_attention_ref(q, kr, vr)
     np.testing.assert_allclose(o, oref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+def test_flash_kernel_vjp_matches_structured(causal, window):
+    """Kernel flash backward (lse-driven) == structured sdpa grads, GQA +
+    non-aligned seq included."""
+    B, H, Hkv, N, D = 2, 4, 2, 200, 32
+    q = _r((B, H, N, D), 0)
+    k, v = _r((B, Hkv, N, D), 1), _r((B, Hkv, N, D), 2)
+    f1 = lambda q, k, v: jnp.sum(jnp.sin(
+        ops.flash_attention(q, k, v, causal, window, True)))
+    f2 = lambda q, k, v: jnp.sum(jnp.sin(
+        structured.sdpa(q, k, v, window, causal)))
+    g1 = jax.grad(f1, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, (0, 1, 2))(q, k, v)
+    for u, w in zip(g1, g2):
+        np.testing.assert_allclose(u, w, rtol=3e-5, atol=3e-5)
+
+
+def test_flash_bwd_kernel_direct():
+    """flash_attention_bwd standalone against jax.grad of the oracle."""
+    BH, N, D = 2, 160, 32
+    q, k, v = _r((BH, N, D), 0), _r((BH, N, D), 1), _r((BH, N, D), 2)
+    out, lse = flash_attention_fwd(q, k, v, causal=True, bq=128, bk=128,
+                                   return_lse=True, **I)
+    g = _r((BH, N, D), 3)
+    dq, dk, dv = flash_attention_bwd(q, k, v, out, lse, g, causal=True,
+                                     bq=128, bk=128, **I)
+    f = lambda q, k, v: jnp.sum(
+        ref.flash_attention_ref(q[None], k[None], v[None])[0] * g)
+    dq_r, dk_r, dv_r = jax.grad(f, (0, 1, 2))(q, k, v)
+    np.testing.assert_allclose(dq, dq_r, rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(dk, dk_r, rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(dv, dv_r, rtol=3e-5, atol=3e-5)

@@ -15,7 +15,11 @@ from repro.configs.base import SHAPES
 def _fake_mesh(data=4, model=4):
     # Mesh over a device "grid" built from the single CPU device repeated is
     # not allowed; use an abstract mesh for spec-construction tests.
-    return jax.sharding.AbstractMesh((data, model), ("data", "model"))
+    # JAX 0.4.x wants ((name, size), ...); 0.5+ wants (sizes, names).
+    try:
+        return jax.sharding.AbstractMesh((("data", data), ("model", model)))
+    except TypeError:
+        return jax.sharding.AbstractMesh((data, model), ("data", "model"))
 
 
 @pytest.mark.parametrize("arch", ASSIGNED)
