@@ -36,7 +36,8 @@ def _time(fn, *args, repeats=3):
 
 
 def bench_train_step(steps: int):
-    """Per-step wall time of mesp.train_step for each mode."""
+    """Per-step wall time of mesp.train_step for each mode, with and
+    without int8-quantized base weights (``*_int8`` entries)."""
     from repro.configs.base import ArchConfig
     from repro.core import mesp
 
@@ -46,23 +47,29 @@ def bench_train_step(steps: int):
                      d_model=256, n_heads=4, n_kv_heads=2, d_ff=512,
                      vocab=512, dtype="float32")
     params = M.init_params(jax.random.PRNGKey(0), cfg)
+    params_q = M.init_params(jax.random.PRNGKey(0), cfg, quantize="int8")
     tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 128), 0, cfg.vocab)
     batch = {"tokens": tokens, "labels": tokens}
 
     out = {}
-    for mode in ("structured", "pallas"):
+    for name, mode, p0 in (("structured", "structured", params),
+                           ("pallas", "pallas", params),
+                           ("structured_int8", "structured", params_q),
+                           ("pallas_int8", "pallas", params_q)):
         step = jax.jit(lambda p, b, m=mode: mesp.train_step(p, cfg, b, 1e-3,
                                                             mode=m))
-        p, _ = step(params, batch)              # compile
+        p, _ = step(p0, batch)                  # compile
         jax.block_until_ready(p)
         t0 = time.perf_counter()
         for _ in range(steps):
             p, loss = step(p, batch)
         jax.block_until_ready(loss)
-        out[mode] = {"step_ms": (time.perf_counter() - t0) / steps * 1e3,
+        out[name] = {"step_ms": (time.perf_counter() - t0) / steps * 1e3,
                      "final_loss": float(loss)}
     out["pallas_over_structured"] = (out["pallas"]["step_ms"] /
                                      out["structured"]["step_ms"])
+    out["int8_over_bf16_pallas"] = (out["pallas_int8"]["step_ms"] /
+                                    out["pallas"]["step_ms"])
     return out, {"arch": cfg.name, "d_model": cfg.d_model,
                  "n_layers": cfg.n_layers, "seq": 128, "batch": 1}
 
@@ -95,6 +102,23 @@ def bench_ops():
                                   (x @ a).T @ (2.0 * g)))
     out["lora_dab"] = {"pallas_ms": _time(d_pl, x, g) * 1e3,
                        "structured_ms": _time(d_jnp, x, g) * 1e3}
+    # quantized-W0 LoRA: dequant-in-VMEM kernel vs structured on a dequant
+    # quantized W0 passed as jit args (not closure constants) so the jnp
+    # dequant isn't constant-folded out of the timing
+    from repro.core import quant
+    qw, sw = quant.quantize_int8(w0)
+    fq_pl = jax.jit(lambda x, qw, sw: ops.lora_linear(
+        x, {"q": qw, "scale": sw}, a, b, None, 2.0))
+    fq_jnp = jax.jit(lambda x, qw, sw: structured.lora_linear(
+        x, quant.dequantize_int8(qw, sw, x.dtype), a, b, None, 2.0))
+    out["lora_fwd_int8"] = {"pallas_ms": _time(fq_pl, x, qw, sw) * 1e3,
+                            "structured_ms": _time(fq_jnp, x, qw, sw) * 1e3}
+    gq_pl = jax.jit(jax.grad(lambda x, qw, sw: jnp.sum(ops.lora_linear(
+        x, {"q": qw, "scale": sw}, a, b, None, 2.0))))
+    gq_jnp = jax.jit(jax.grad(lambda x, qw, sw: jnp.sum(structured.lora_linear(
+        x, quant.dequantize_int8(qw, sw, x.dtype), a, b, None, 2.0))))
+    out["lora_dx_int8"] = {"pallas_ms": _time(gq_pl, x, qw, sw) * 1e3,
+                           "structured_ms": _time(gq_jnp, x, qw, sw) * 1e3}
     # rmsnorm fwd
     n_pl = jax.jit(lambda x: ops.rmsnorm(x, w))
     n_jnp = jax.jit(lambda x: structured.rmsnorm(x, w))

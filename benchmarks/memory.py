@@ -52,19 +52,25 @@ def with_rank(cfg: ArchConfig, rank: int) -> ArchConfig:
 
 
 def measure(arch: str, engine: str, seq: int, batch: int = 1,
-            rank: int = 8, use_cache: bool = True) -> dict:
+            rank: int = 8, use_cache: bool = True,
+            quantize: Optional[str] = None) -> dict:
     """Compile one train step on a single abstract device; return metrics.
 
-    engine: mesp | mebp | store_h | mezo
+    engine: mesp | mesp_pallas | mebp | store_h | mezo
+    quantize: None | "int8" — frozen base weights held as {q, scale} leaves;
+    shows up in ``arg_mb`` (weight bytes halve) and, on non-pallas engines,
+    in ``temp_mb`` via the dequant workspaces.
     """
-    key = f"{arch}|{engine}|{seq}|{batch}|r{rank}"
+    key = f"{arch}|{engine}|{seq}|{batch}|r{rank}" + \
+        (f"|{quantize}" if quantize else "")
     cache = _cache()
     if use_cache and key in cache:
         return cache[key]
 
     cfg = with_rank(get_config(arch), rank)
     pstruct = jax.eval_shape(
-        lambda: model_lib.init_params(jax.random.PRNGKey(0), cfg))
+        lambda: model_lib.init_params(jax.random.PRNGKey(0), cfg,
+                                      quantize=quantize))
     bstruct = {
         "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
         "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
@@ -81,8 +87,8 @@ def measure(arch: str, engine: str, seq: int, batch: int = 1,
             return model_lib.merge_params(
                 new, model_lib.split_params(params)[1]), loss
     else:
-        mode = {"mesp": "structured", "mebp": "plain",
-                "store_h": "store_h"}[engine]
+        mode = {"mesp": "structured", "mesp_pallas": "pallas",
+                "mebp": "plain", "store_h": "store_h"}[engine]
 
         def step(params, batch):
             return mesp.train_step(params, cfg, batch, lr, mode=mode)

@@ -36,6 +36,7 @@ from repro.configs.base import ArchConfig
 BF16 = 2
 F32 = 4
 W4 = 0.5          # 4-bit quantized frozen weights
+INT8 = 1          # int8 W0 (TPU path, core/quant.py)
 RUNTIME_MB = 40.0  # process/runtime floor (Metal heap, code, tokenizer)
 
 
@@ -74,6 +75,35 @@ def _dirty_weight_mb(cfg: ArchConfig) -> float:
     return (dequant_ws + touched_emb) / 2**20
 
 
+def _scale_count(cfg: ArchConfig) -> float:
+    """Per-output-channel f32 scales for the int8 format (one per linear
+    output column: q/k/v/o + gate/up/down per block)."""
+    return (cfg.q_size + 2 * cfg.kv_size + cfg.d_model
+            + 2 * cfg.d_ff + cfg.d_model) * cfg.n_layers
+
+
+def resident_weight_mb(cfg: ArchConfig, fmt: str = "bf16") -> float:
+    """HBM-resident frozen weights — the TPU accounting, where nothing is
+    file-backed (contrast ``_dirty_weight_mb``'s mmap model).
+
+    * ``bf16`` — dense W0 resident at 2 B/param.
+    * ``int8`` — ``core/quant.py`` format: 1 B/param + f32 per-output-channel
+      scales. No dequant workspace is charged: the pallas kernel path
+      (``kernels/lora_quant.py``) dequantizes tile-wise in VMEM, never
+      materializing a dense W0 in HBM.
+
+    Embeddings (and the untied head) stay bf16 in both formats —
+    ``quantize_frozen`` only rewrites ``w`` leaves.
+    """
+    lin = _block_linear_params(cfg) * cfg.n_layers
+    emb = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    if fmt == "bf16":
+        return (lin + emb) * BF16 / 2**20
+    if fmt == "int8":
+        return (lin * INT8 + _scale_count(cfg) * F32 + emb * BF16) / 2**20
+    raise ValueError(fmt)
+
+
 def _per_block_intermediates(cfg: ArchConfig, B: int, N: int, rank: int,
                              with_h: bool = True) -> float:
     """Bytes mx.grad retains per transformer block (fused attention)."""
@@ -110,11 +140,16 @@ def _mesp_stored_subset(cfg: ArchConfig, B: int, N: int) -> float:
 
 
 def simulate(arch: str, method: str, seq: int, batch: int = 1,
-             rank: int = 8) -> Breakdown:
+             rank: int = 8, weights_fmt: str | None = None) -> Breakdown:
+    """``weights_fmt``: None reproduces the paper's phone setting (4-bit
+    mmap'd weights, mostly clean pages); "bf16"/"int8" switch to the
+    HBM-resident accounting (``resident_weight_mb``) used by the quantized
+    column in paper_tables.md."""
     cfg = get_config(arch)
     B, N, L = batch, seq, cfg.n_layers
     lora_mb = _lora_params(cfg, rank) * BF16 / 2**20
-    weights_mb = _dirty_weight_mb(cfg)
+    weights_mb = (_dirty_weight_mb(cfg) if weights_fmt is None
+                  else resident_weight_mb(cfg, weights_fmt))
 
     blk = _per_block_intermediates(cfg, B, N, rank)
     out = _block_output(cfg, B, N)

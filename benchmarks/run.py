@@ -236,24 +236,88 @@ def figure2(steps: int = 300):
 
 # ---------------------------------------------------------------- kernels
 def kernels_bench(steps: int = 3):
-    """Structured vs pallas per-step timing -> BENCH_kernels.json (see
-    benchmarks/kernels.py; interpret-mode numbers off-TPU)."""
+    """Structured vs pallas per-step timing (bf16- and int8-W0) ->
+    BENCH_kernels.json (see benchmarks/kernels.py; interpret-mode numbers
+    off-TPU)."""
     from benchmarks import kernels as K
     result = K.run_and_write(steps)
     step = result["train_step"]
-    report("\n## Kernels — structured vs pallas per step "
+    report("## Kernels — structured vs pallas per step "
            f"(backend={result['backend']}, interpret={result['interpret']})")
     report("| path | step ms |")
     report("|---|---|")
-    for mode in ("structured", "pallas"):
+    for mode in ("structured", "pallas", "structured_int8", "pallas_int8"):
         emit(f"kernels/{mode}/step_ms", f"{step[mode]['step_ms']:.2f}")
         report(f"| {mode} | {step[mode]['step_ms']:.2f} |")
     emit("kernels/pallas_over_structured",
          f"{step['pallas_over_structured']:.3f}")
+    emit("kernels/int8_over_bf16_pallas",
+         f"{step['int8_over_bf16_pallas']:.3f}")
+
+
+# ------------------------------------------------------------------ quant
+def table_quant():
+    """Quantized base weights (paper §4.5): int8 W0 on top of MeSP.
+
+    Sim columns use the HBM-resident weight accounting
+    (``memsim.resident_weight_mb``) for the paper models; the XLA column
+    AOT-compiles the reduced 0.5B-family config with/without ``quantize``
+    and reports argument (weight+input) bytes — the quantity the int8
+    format halves. Activation terms are MeSP's and unchanged by W0 format.
+    """
+    from benchmarks.memory import measure
+    from benchmarks.memsim import resident_weight_mb, simulate
+    from repro.configs import get_config
+    report("## Quantized base weights — MeSP + int8 W0 "
+           "(dequant-in-VMEM kernels) vs bf16 W0, seq 256")
+    report("| model | W0 bf16 MB | W0 int8 MB | total bf16 MB | "
+           "total int8 MB | W0 red. | total red. |")
+    report("|---|---|---|---|---|---|---|")
+    for arch in PAPER_MODELS:
+        wb = resident_weight_mb(get_config(arch), "bf16")
+        wq = resident_weight_mb(get_config(arch), "int8")
+        tb = simulate(arch, "mesp", 256, weights_fmt="bf16").total_mb
+        tq = simulate(arch, "mesp", 256, weights_fmt="int8").total_mb
+        emit(f"quant/{arch}/int8_weights_mb", f"{wq:.1f}",
+             f"bf16={wb:.1f} total_int8={tq:.1f}")
+        report(f"| {arch} | {wb:.0f} | {wq:.0f} | {tb:.0f} | {tq:.0f} | "
+               f"{1 - wq / wb:.0%} | {1 - tq / tb:.0%} |")
+    xb = measure("qwen2.5-0.5b", "mesp", seq=256)
+    xq = measure("qwen2.5-0.5b", "mesp", seq=256, quantize="int8")
+    emit("quant/qwen2.5-0.5b/xla_arg_mb", f"{xq['arg_mb']:.1f}",
+         f"bf16={xb['arg_mb']:.1f}")
+    report(f"\nXLA AOT cross-check (qwen2.5-0.5b, mesp): argument bytes "
+           f"{xb['arg_mb']:.0f} MB (bf16 W0) → {xq['arg_mb']:.0f} MB "
+           f"(int8 W0), {1 - xq['arg_mb'] / xb['arg_mb']:.0%} lower.")
 
 
 TABLES = {"t1": table1, "t2": table2, "t3": table3, "t4": table4,
-          "t5": table5, "fig2": figure2, "kernels": kernels_bench}
+          "t5": table5, "fig2": figure2, "kernels": kernels_bench,
+          "quant": table_quant}
+
+
+def _merge_report(path, sections):
+    """Update per-table ``<!-- section:NAME -->`` chunks in the report,
+    keeping sections from earlier runs that were not re-run (so
+    ``--only kernels quant`` doesn't wipe t1-t5)."""
+    import re
+    existing = {}
+    if os.path.exists(path):
+        txt = open(path).read()
+        # pre-marker-era content (or hand-written preamble): keep verbatim
+        head = re.split(r"<!-- section:", txt, maxsplit=1)[0].strip("\n")
+        if head:
+            existing["_legacy"] = head
+        for m in re.finditer(r"<!-- section:(\w+) -->\n(.*?)"
+                             r"(?=<!-- section:|\Z)", txt, re.S):
+            existing[m.group(1)] = m.group(2).strip("\n")
+    existing.update(sections)
+    order = (["_legacy"] if "_legacy" in existing else []) + \
+        [k for k in TABLES if k in existing] + \
+        [k for k in existing if k not in TABLES and k != "_legacy"]
+    with open(path, "w") as f:
+        for k in order:
+            f.write(f"<!-- section:{k} -->\n{existing[k]}\n\n")
 
 
 def main(argv=None):
@@ -262,14 +326,16 @@ def main(argv=None):
     args = ap.parse_args(argv)
     os.makedirs(RESULTS_DIR, exist_ok=True)
     print("name,value,derived")
+    sections = {}
     for name, fn in TABLES.items():
         if args.only and name not in args.only:
             continue
         t0 = time.monotonic()
+        mark = len(_report_lines)
         fn()
+        sections[name] = "\n".join(_report_lines[mark:]).strip("\n")
         emit(f"{name}/elapsed_s", f"{time.monotonic()-t0:.1f}")
-    with open(os.path.join(RESULTS_DIR, "paper_tables.md"), "w") as f:
-        f.write("\n".join(_report_lines) + "\n")
+    _merge_report(os.path.join(RESULTS_DIR, "paper_tables.md"), sections)
     print(f"# report: {os.path.join(RESULTS_DIR, 'paper_tables.md')}")
 
 

@@ -1,0 +1,58 @@
+"""CI guard: every ``--flag`` README.md attributes to the training launcher
+must actually be exposed by ``repro.launch.train``'s argument parser.
+
+Scans fenced code blocks that invoke ``repro.launch.train`` and any prose
+line mentioning the launcher/"Flags", extracts ``--long-option`` tokens and
+diffs them against ``build_arg_parser()``. Exits non-zero (failing CI) on a
+README flag the parser doesn't know.
+
+    PYTHONPATH=src python scripts/check_readme_flags.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+FLAG_RE = re.compile(r"(?<![\w-])--[a-z][a-z0-9-]*")
+
+
+def readme_train_flags(text: str) -> set[str]:
+    flags: set[str] = set()
+    # fenced code blocks that invoke the launcher
+    for block in re.findall(r"```.*?```", text, re.S):
+        if "repro.launch.train" in block:
+            flags.update(FLAG_RE.findall(block))
+    # prose: lines in the paragraph(s) that enumerate launcher flags
+    for para in text.split("\n\n"):
+        if para.lstrip().startswith("Flags:"):
+            flags.update(FLAG_RE.findall(para))
+    return flags
+
+
+def main() -> int:
+    readme = Path(__file__).resolve().parent.parent / "README.md"
+    if not readme.exists():
+        print(f"FAIL: {readme} does not exist")
+        return 1
+    from repro.launch.train import build_arg_parser
+    known = {opt for action in build_arg_parser()._actions
+             for opt in action.option_strings if opt.startswith("--")}
+    used = readme_train_flags(readme.read_text())
+    if not used:
+        print("FAIL: README.md documents no repro.launch.train flags "
+              "(quickstart section missing?)")
+        return 1
+    unknown = sorted(used - known)
+    if unknown:
+        print(f"FAIL: README.md references launcher flags not exposed by "
+              f"`python -m repro.launch.train --help`: {unknown}")
+        print(f"      parser knows: {sorted(known)}")
+        return 1
+    print(f"OK: {len(used)} README launcher flags all exposed by the parser "
+          f"({len(known)} known)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

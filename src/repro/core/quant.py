@@ -43,8 +43,28 @@ def quantize_frozen(params, *, skip_keys=("a", "b", "bias")):
     return jax.tree_util.tree_map_with_path(one, params)
 
 
+def is_quantized(p) -> bool:
+    """True for a ``{"q", "scale"}`` quantized-weight leaf."""
+    return isinstance(p, dict) and "q" in p and "scale" in p
+
+
 def maybe_dequant(p, dtype=jnp.bfloat16):
     """Resolve a (possibly quantized) linear weight leaf to a dense matrix."""
-    if isinstance(p, dict) and "q" in p:
+    if is_quantized(p):
         return dequantize_int8(p["q"], p["scale"], dtype)
     return p
+
+
+#: ``--quantize`` values accepted by the launchers / init_params.
+METHODS = ("none", "int8")
+
+
+def quantize_params(params, method):
+    """Apply a named quantization method to a param pytree (None/"none" is a
+    no-op). The single entry point behind ``launch/train.py --quantize``."""
+    if method is None or method == "none":
+        return params
+    if method == "int8":
+        return quantize_frozen(params)
+    raise ValueError(f"unknown quantize method {method!r}; "
+                     f"expected one of {METHODS}")

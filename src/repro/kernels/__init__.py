@@ -3,6 +3,10 @@
 * ``lora_fused``       — y = x@W0 + s·(x@A)@B with h kept in VMEM (fwd), the
                          fused dx backward, and the one-pass fused dA/dB
                          backward with h recomputed tile-wise (paper A.1).
+* ``lora_quant``       — the same fwd/dx with int8 W0 (paper §4.5):
+                         q·scale dequantized tile-wise in VMEM, dense W0
+                         never materialized in HBM; dA/dB shared with
+                         ``lora_fused`` (they don't read W0).
 * ``rmsnorm``          — fused forward / structured backward (paper A.3).
 * ``flash_attention``  — online-softmax forward emitting per-row logsumexp +
                          a backward that recomputes probabilities from it
@@ -19,4 +23,4 @@ Each kernel has a pure-jnp oracle in ``ref.py`` and a jit'd wrapper in
 ``ops.py``; tests sweep shapes/dtypes in interpret mode against the oracles
 and against the structured custom_vjp rules.
 """
-from repro.kernels import autotune, ops, ref, tiling  # noqa: F401
+from repro.kernels import autotune, lora_quant, ops, ref, tiling  # noqa: F401

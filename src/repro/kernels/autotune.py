@@ -52,13 +52,18 @@ def _pick(n: int, tiers: Iterable[int]) -> int:
     return 128
 
 
-def _matmul_blocks(M: int, K: int, N: int, dtype) -> Dict[str, int]:
+def _matmul_blocks(M: int, K: int, N: int, dtype,
+                   w_itemsize: Optional[int] = None) -> Dict[str, int]:
+    """``w_itemsize``: bytes/elem of the weight tile when it differs from
+    the activation dtype (int8-W0 kernels pass 1 — the smaller tile admits
+    larger K/N blocks for the same VMEM residency)."""
     bm = _pick(M, (256,))
     bn = _pick(N, (512, 256))
     bk = _pick(K, (512, 256))
     # shrink until x/w/acc blocks fit the soft budget
     item = jnp.dtype(dtype).itemsize
-    while (bm * bk * item + bk * bn * item + bm * bn * 4) > _VMEM_BUDGET \
+    w_item = item if w_itemsize is None else w_itemsize
+    while (bm * bk * item + bk * bn * w_item + bm * bn * 4) > _VMEM_BUDGET \
             and max(bm, bn, bk) > 128:
         if bk >= bn and bk > 128:
             bk //= 2
@@ -72,6 +77,9 @@ def _matmul_blocks(M: int, K: int, N: int, dtype) -> Dict[str, int]:
 def _heuristic(op: str, dims: Dict[str, int], dtype) -> Dict[str, int]:
     if op in ("lora_fused", "lora_dx"):
         return _matmul_blocks(dims["M"], dims["K"], dims["N"], dtype)
+    if op in ("lora_fused_q", "lora_dx_q"):
+        return _matmul_blocks(dims["M"], dims["K"], dims["N"], dtype,
+                              w_itemsize=1)
     if op == "lora_dab":
         # grid is rows-only; x[bm,K] and g[bm,N] are both resident
         item = jnp.dtype(dtype).itemsize

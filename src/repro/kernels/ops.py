@@ -26,9 +26,10 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.core import structured
+from repro.core import quant, structured
 from repro.kernels import autotune
 from repro.kernels import lora_fused as _lf
+from repro.kernels import lora_quant as _lq
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import flash_attention as _fa
 
@@ -91,19 +92,74 @@ def _bwd(scale, interpret, res, g):
 lora_linear_kernel.defvjp(_fwd, _bwd)
 
 
+# ---------------------------------------------------------------------------
+# Quantized-W0 LoRA linear: int8 q + per-output-channel scale dequantized in
+# VMEM (kernels/lora_quant.py). Forward and dx never materialize a dense W0
+# in HBM; dA/dB reuse the unquantized fused dab kernel (they don't read W0).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def lora_linear_kernel_q(x, q, s, a, b, scale: float = 2.0,
+                         interpret: bool = False):
+    """y = x@(q·s) + s_lora·(x@A)@B. q: int8 [K,N]; s: f32 [1,N]."""
+    lead = x.shape[:-1]
+    x2 = _flat(x)
+    blk = autotune.choose_blocks("lora_fused_q", x.dtype, M=x2.shape[0],
+                                 K=x2.shape[1], N=q.shape[1])
+    y = _lq.lora_fused_q(x2, q, s, a, b, scale, interpret=interpret, **blk)
+    return y.reshape(*lead, q.shape[1])
+
+
+def _fwd_q(x, q, s, a, b, scale, interpret):
+    return lora_linear_kernel_q(x, q, s, a, b, scale, interpret), (x, q, s,
+                                                                   a, b)
+
+
+def _bwd_q(scale, interpret, res, g):
+    x, q, s, a, b = res
+    lead = x.shape[:-1]
+    g2 = _flat(g).astype(x.dtype)
+    x2 = _flat(x)
+    M, K = x2.shape
+    N = q.shape[1]
+    dx = _lq.lora_dx_q(g2, q, s, a, b, scale, interpret=interpret,
+                       **autotune.choose_blocks("lora_dx_q", x.dtype,
+                                                M=M, K=K, N=N))
+    da, db = _lf.lora_dab(x2, g2, a, b, scale, interpret=interpret,
+                          **autotune.choose_blocks("lora_dab", x.dtype,
+                                                   M=M, K=K, N=N))
+    # q is int8 (float0 cotangent); s is frozen alongside it
+    return (dx.reshape(*lead, K), structured._zero_cot(q),
+            jnp.zeros_like(s), da, db)
+
+
+lora_linear_kernel_q.defvjp(_fwd_q, _bwd_q)
+
+
 def lora_supported(x, w0) -> bool:
+    if quant.is_quantized(w0):
+        w0 = w0["q"]
     return x.ndim >= 2 and w0.ndim == 2
 
 
 def lora_linear(x, w0, a, b, bias=None, scale: float = 2.0, *,
                 interpret=None):
     """Dispatch: Pallas LoRA linear, structured fallback on unsupported
-    shapes (e.g. MoE per-expert [E,·,·] weights)."""
+    shapes (e.g. MoE per-expert [E,·,·] weights). ``w0`` may be a dense
+    matrix or a quantized ``{"q", "scale"}`` leaf — quantized weights route
+    to the dequant-in-VMEM kernels, falling back to the structured jnp path
+    on a dequantized copy (``core/quant.maybe_dequant``)."""
     if not lora_supported(x, w0):
-        return structured.lora_linear(x, w0, a, b, bias, scale)
+        return structured.lora_linear(x, quant.maybe_dequant(w0, x.dtype),
+                                      a, b, bias, scale)
     if interpret is None:
         interpret = pallas_interpret()
-    y = lora_linear_kernel(x, w0, a, b, scale, interpret)
+    if quant.is_quantized(w0):
+        y = lora_linear_kernel_q(x, w0["q"], w0["scale"], a, b, scale,
+                                 interpret)
+    else:
+        y = lora_linear_kernel(x, w0, a, b, scale, interpret)
     # bias is frozen (no grad needed): a plain add stores no residuals
     return y + bias if bias is not None else y
 

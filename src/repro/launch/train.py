@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config
-from repro.core import mebp, mesp, mezo
+from repro.core import mebp, mesp, mezo, quant
 from repro.data import make_batch_iterator
 from repro.launch import sharding as sh
 from repro.launch.mesh import make_host_mesh
@@ -51,8 +51,10 @@ def build_step(cfg, engine: str, opt, act_spec=None):
     return step
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+def build_arg_parser() -> argparse.ArgumentParser:
+    """The launcher's CLI (importable: scripts/check_readme_flags.py keeps
+    README.md honest against it)."""
+    ap = argparse.ArgumentParser(prog="repro.launch.train")
     ap.add_argument("--arch", default="qwen2.5-0.5b")
     ap.add_argument("--reduced", action="store_true",
                     help="use the tiny same-family config (CPU-runnable)")
@@ -61,6 +63,11 @@ def main(argv=None):
                              "store_h"],
                     help="mesp_pallas = MeSP with the fused Pallas kernel "
                          "path (interpret mode off-TPU)")
+    ap.add_argument("--quantize", default="none", choices=list(quant.METHODS),
+                    help="int8 = keep frozen base weights quantized "
+                         "(per-output-channel symmetric); with "
+                         "--engine mesp_pallas W0 is dequantized in VMEM, "
+                         "other engines dequantize in the jnp graph")
     ap.add_argument("--optimizer", default="sgd",
                     choices=["sgd", "sgd_momentum", "adamw"])
     ap.add_argument("--lr", type=float, default=1e-4)
@@ -71,14 +78,18 @@ def main(argv=None):
     ap.add_argument("--ckpt-interval", type=int, default=50)
     ap.add_argument("--log-interval", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    args = build_arg_parser().parse_args(argv)
 
     logging.basicConfig(level=logging.INFO)
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    log.info("arch=%s layers=%d d_model=%d engine=%s",
-             cfg.name, cfg.n_layers, cfg.d_model, args.engine)
+    log.info("arch=%s layers=%d d_model=%d engine=%s quantize=%s",
+             cfg.name, cfg.n_layers, cfg.d_model, args.engine, args.quantize)
 
     opt = make_optimizer(args.optimizer, constant(args.lr))
     step_fn = jax.jit(build_step(cfg, args.engine, opt))
@@ -90,7 +101,8 @@ def main(argv=None):
     ckpt = Checkpointer(args.ckpt_dir, interval=args.ckpt_interval)
 
     def init_state():
-        params = model_lib.init_params(jax.random.PRNGKey(args.seed), cfg)
+        params = model_lib.init_params(jax.random.PRNGKey(args.seed), cfg,
+                                       quantize=args.quantize)
         return params, opt.init(params)
 
     t_last = [time.monotonic()]

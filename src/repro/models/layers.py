@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core import structured
 from repro.core.flash import flash_attention
+from repro.core.quant import maybe_dequant
 from repro.kernels import ops as kops
 
 Array = jax.Array
@@ -86,19 +87,26 @@ def linear_params(key, d_in: int, d_out: int, cfg: ArchConfig, *,
 def apply_linear(p, x, cfg: ArchConfig, *, mode: str = "structured"):
     """LoRA linear. mode: "structured" (MeSP — h recomputed), "pallas"
     (MeSP via fused TPU kernels), "store_h" (Table 5 ablation), "plain"
-    (MeBP — framework autodiff)."""
+    (MeBP — framework autodiff).
+
+    ``p["w"]`` is either a dense frozen matrix or an int8 ``{"q", "scale"}``
+    leaf (``core/quant.quantize_frozen``). The pallas path hands the
+    quantized leaf to the dequant-in-VMEM kernels; the jnp paths dequantize
+    to a dense matrix first (``maybe_dequant``) — same math, W0 materialized.
+    """
     bias = p.get("bias")
     if "a" in p:
-        if mode == "plain":
-            y = x @ p["w"] + cfg.lora.scale * ((x @ p["a"]) @ p["b"])
-            return y + bias if bias is not None else y
         if mode == "pallas":
             return kops.lora_linear(x, p["w"], p["a"], p["b"], bias,
                                     cfg.lora.scale)
+        w = maybe_dequant(p["w"], x.dtype)
+        if mode == "plain":
+            y = x @ w + cfg.lora.scale * ((x @ p["a"]) @ p["b"])
+            return y + bias if bias is not None else y
         fn = structured.lora_linear_store_h if mode == "store_h" \
             else structured.lora_linear
-        return fn(x, p["w"], p["a"], p["b"], bias, cfg.lora.scale)
-    y = x @ p["w"]
+        return fn(x, w, p["a"], p["b"], bias, cfg.lora.scale)
+    y = x @ maybe_dequant(p["w"], x.dtype)
     if bias is not None:
         y = y + bias
     return y

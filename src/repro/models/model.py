@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core import structured
+from repro.core import quant, structured
 from repro.models import griffin, layers, moe as moe_lib, rwkv6
 
 Array = jax.Array
@@ -115,7 +115,10 @@ def _stack_params(key, cfg, kind, n):
 # ---------------------------------------------------------------------------
 
 
-def init_params(key, cfg: ArchConfig):
+def init_params(key, cfg: ArchConfig, *, quantize: Optional[str] = None):
+    """Init the param pytree; ``quantize="int8"`` converts every frozen
+    ``w`` leaf to a ``{"q", "scale"}`` dict (``core/quant``) — LoRA factors,
+    biases, norms and embeddings stay in ``cfg.dtype``."""
     k_emb, k_blk, k_tail, k_enc = jax.random.split(key, 4)
     dtype = jnp.dtype(cfg.dtype)
     p = {"embed": layers.embed_params(k_emb, cfg),
@@ -164,7 +167,7 @@ def init_params(key, cfg: ArchConfig):
         p["blocks"] = _stack_params(k_blk, cfg, "dec", cfg.n_layers)
     else:
         raise ValueError(fam)
-    return p
+    return quant.quantize_params(p, quantize)
 
 
 # ---------------------------------------------------------------------------

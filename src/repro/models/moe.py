@@ -129,13 +129,18 @@ def moe_mlp(p, x, cfg: ArchConfig, *, mode: str = "structured", shard=None):
     store_h = mode == "store_h"
 
     def elin(q, z):
+        # per-expert [E,·,·] weights: structured jnp path in every mode
+        # (kernel dispatch would fall back anyway); quantized experts are
+        # dequantized here — batched int8 expert kernels are future work.
+        from repro.core.quant import maybe_dequant
+        w = maybe_dequant(q["w"], z.dtype)
         if "a" in q:
             if mode == "plain":
-                return z @ q["w"] + cfg.lora.scale * ((z @ q["a"]) @ q["b"])
+                return z @ w + cfg.lora.scale * ((z @ q["a"]) @ q["b"])
             fn = structured.lora_linear_store_h if store_h \
                 else structured.lora_linear
-            return fn(z, q["w"], q["a"], q["b"], None, cfg.lora.scale)
-        return z @ q["w"]
+            return fn(z, w, q["a"], q["b"], None, cfg.lora.scale)
+        return z @ w
 
     hidden = layers.act_silu(elin(p["gate"], ebuf), mode) * elin(p["up"], ebuf)
     y_ebuf = elin(p["down"], hidden)                         # [E, B·C, d]

@@ -92,6 +92,18 @@ def test_pallas_step_equals_structured_step(params):
         np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-6)
 
 
+def test_pallas_grads_match_structured_quantized():
+    """``quantize=int8`` composes with mode="pallas": the dequant-in-VMEM
+    kernels and the structured dequant fallback agree ≤1e-5 on the same
+    non-tile-aligned shapes (full suite in test_quant_mode.py)."""
+    qp = M.init_params(jax.random.PRNGKey(0), CFG, quantize="int8")
+    batch = _batch()
+    l_s, g_s = mesp.value_and_grad(qp, CFG, batch, mode="structured")
+    l_p, g_p = mesp.value_and_grad(qp, CFG, batch, mode="pallas")
+    np.testing.assert_allclose(float(l_p), float(l_s), rtol=1e-6)
+    assert _rel(g_p, g_s) <= 1e-5
+
+
 def test_dispatch_falls_back_on_unsupported():
     """MoE-style batched [E,·,·] weights take the structured path (and still
     deliver correct gradients through the dispatcher)."""
