@@ -38,9 +38,9 @@ def _time(fn, *args, repeats=3):
 def bench_train_step(steps: int):
     """Per-step wall time of mesp.train_step for each mode, with and
     without int8-quantized base weights (``*_int8`` entries)."""
+    from repro.api import ExecutionPolicy
     from repro.configs.base import ArchConfig
     from repro.core import mesp
-
     from repro.models import model as M
 
     cfg = ArchConfig(name="bench-dense", family="dense", n_layers=2,
@@ -52,12 +52,13 @@ def bench_train_step(steps: int):
     batch = {"tokens": tokens, "labels": tokens}
 
     out = {}
-    for name, mode, p0 in (("structured", "structured", params),
-                           ("pallas", "pallas", params),
-                           ("structured_int8", "structured", params_q),
-                           ("pallas_int8", "pallas", params_q)):
-        step = jax.jit(lambda p, b, m=mode: mesp.train_step(p, cfg, b, 1e-3,
-                                                            mode=m))
+    for name, backend, p0 in (("structured", "structured", params),
+                              ("pallas", "pallas", params),
+                              ("structured_int8", "structured", params_q),
+                              ("pallas_int8", "pallas", params_q)):
+        policy = ExecutionPolicy(backend=backend)
+        step = jax.jit(lambda p, b, pol=policy: mesp.train_step(
+            p, cfg, b, 1e-3, policy=pol))
         p, _ = step(p0, batch)                  # compile
         jax.block_until_ready(p)
         t0 = time.perf_counter()

@@ -23,9 +23,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.api import ExecutionPolicy, get_engine
 from repro.configs import get_config
 from repro.configs.base import ArchConfig, LoRAConfig
-from repro.core import mesp, mezo
 from repro.models import model as model_lib
 from repro.roofline.hlo_parse import analyze_text
 
@@ -56,7 +56,9 @@ def measure(arch: str, engine: str, seq: int, batch: int = 1,
             quantize: Optional[str] = None) -> dict:
     """Compile one train step on a single abstract device; return metrics.
 
-    engine: mesp | mesp_pallas | mebp | store_h | mezo
+    engine: any registered engine name (``repro.api.engine_names()``); the
+    step is built from the registration's ``value_and_grad`` hook, so a
+    newly registered engine is measurable with no edits here.
     quantize: None | "int8" — frozen base weights held as {q, scale} leaves;
     shows up in ``arg_mb`` (weight bytes halve) and, on non-pallas engines,
     in ``temp_mb`` via the dequant workspaces.
@@ -77,21 +79,22 @@ def measure(arch: str, engine: str, seq: int, batch: int = 1,
     }
 
     lr = 1e-4
-    if engine == "mezo":
-        def step(params, batch):
-            loss, grads = mezo.spsa_grad(params, cfg, batch,
-                                         jax.random.PRNGKey(0))
-            new = jax.tree_util.tree_map(
-                lambda p, g: p - lr * g, *model_lib.split_params(params)[:1],
-                grads)
-            return model_lib.merge_params(
-                new, model_lib.split_params(params)[1]), loss
-    else:
-        mode = {"mesp": "structured", "mesp_pallas": "pallas",
-                "mebp": "plain", "store_h": "store_h"}[engine]
+    eng = get_engine(engine)
+    if eng.value_and_grad is None:
+        raise ValueError(
+            f"engine {engine!r} declares no value_and_grad hook; register "
+            f"it with value_and_grad=... to make it AOT-measurable (or "
+            f"benchmark=False to keep it out of the sweep)")
+    policy = ExecutionPolicy(backend=eng.backend or "plain",
+                             quantize=quantize or "none")
 
-        def step(params, batch):
-            return mesp.train_step(params, cfg, batch, lr, mode=mode)
+    def step(params, batch):
+        loss, grads = eng.value_and_grad(params, cfg, batch, policy=policy,
+                                         key=jax.random.PRNGKey(0))
+        new = jax.tree_util.tree_map(
+            lambda p, g: p if g is None else (p - lr * g.astype(p.dtype)),
+            params, grads, is_leaf=lambda x: x is None)
+        return new, loss
 
     compiled = jax.jit(step).lower(pstruct, bstruct).compile()
     ma = compiled.memory_analysis()

@@ -139,12 +139,34 @@ def _mesp_stored_subset(cfg: ArchConfig, B: int, N: int) -> float:
     return (2 * B * N * d + B * N * cfg.q_size + B * N * f) * BF16
 
 
+#: retention models implemented below; engine names resolve onto one of
+#: these via the registry's ``memsim`` hook (see ``_retention_model``)
+RETENTION_MODELS = ("mebp", "mesp", "store_h", "mezo")
+
+
+def _retention_model(method: str) -> str:
+    """Map an engine name to its analytical retention model: either one of
+    RETENTION_MODELS directly, or any registered engine (its registration
+    declares which model describes it — the registry's memory-sim hook)."""
+    if method in RETENTION_MODELS:
+        return method
+    from repro.api import get_engine
+    model = get_engine(method).memsim
+    if model not in RETENTION_MODELS:
+        raise ValueError(
+            f"engine {method!r} declares memsim={model!r}, not one of "
+            f"{RETENTION_MODELS}")
+    return model
+
+
 def simulate(arch: str, method: str, seq: int, batch: int = 1,
              rank: int = 8, weights_fmt: str | None = None) -> Breakdown:
-    """``weights_fmt``: None reproduces the paper's phone setting (4-bit
+    """``method``: a retention model or any registered engine name.
+    ``weights_fmt``: None reproduces the paper's phone setting (4-bit
     mmap'd weights, mostly clean pages); "bf16"/"int8" switch to the
     HBM-resident accounting (``resident_weight_mb``) used by the quantized
     column in paper_tables.md."""
+    method = _retention_model(method)
     cfg = get_config(arch)
     B, N, L = batch, seq, cfg.n_layers
     lora_mb = _lora_params(cfg, rank) * BF16 / 2**20

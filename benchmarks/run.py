@@ -20,7 +20,20 @@ import numpy as np
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
 PAPER_MODELS = ["qwen2.5-0.5b", "qwen2.5-1.5b", "qwen2.5-3b"]
-ENGINES = ["mebp", "mezo", "mesp"]
+
+
+def _engines():
+    """Benchmark sweep list, generated from the engine registry: every
+    registration with ``benchmark=True`` and a ``value_and_grad`` hook (the
+    hook is what ``benchmarks/memory.py`` AOT-measures, so it is the price
+    of admission; a newly registered engine declaring one joins the sweep
+    automatically). ``mebp`` is the reduction baseline."""
+    from repro.api import list_engines
+    return [e.name for e in list_engines()
+            if e.benchmark and e.value_and_grad is not None]
+
+
+ENGINES = _engines()
 
 _report_lines = []
 
@@ -56,19 +69,22 @@ def table1():
            "| XLA temp MB | HLO FLOPs |")
     report("|---|---|---|---|---|---|---|---|")
     for arch in PAPER_MODELS:
-        base_sim = base_paper = None
+        sims = {e: simulate(arch, e, 256).total_mb for e in ENGINES}
+        base_sim = sims["mebp"]
+        base_paper = PAPER_T1[(arch, "mebp")]
         for engine in ENGINES:
-            sim = simulate(arch, engine, 256).total_mb
-            paper = PAPER_T1[(arch, engine)]
-            if engine == "mebp":
-                base_sim, base_paper = sim, paper
+            sim = sims[engine]
+            paper = PAPER_T1.get((arch, engine))  # engines beyond the
+            # paper's three have no reference column
             m = measure(arch, engine, seq=256)
             red_s = 1 - sim / base_sim
-            red_p = 1 - paper / base_paper
+            paper_s = paper if paper is not None else "—"
+            red_p = (f"{1 - paper / base_paper:.0%}" if paper is not None
+                     else "—")
             emit(f"t1/{arch}/{engine}/sim_mb", f"{sim:.1f}",
-                 f"paper={paper} xla_temp={m['temp_mb']:.0f}")
-            report(f"| {arch} | {engine} | {sim:.0f} | {paper} | "
-                   f"{red_s:.0%} | {red_p:.0%} | {m['temp_mb']:.0f} | "
+                 f"paper={paper_s} xla_temp={m['temp_mb']:.0f}")
+            report(f"| {arch} | {engine} | {sim:.0f} | {paper_s} | "
+                   f"{red_s:.0%} | {red_p} | {m['temp_mb']:.0f} | "
                    f"{m['flops']:.3g} |")
 
 
@@ -321,6 +337,8 @@ def _merge_report(path, sections):
 
 
 def main(argv=None):
+    global ENGINES
+    ENGINES = _engines()  # re-read: pick up engines registered post-import
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", choices=list(TABLES), default=None)
     args = ap.parse_args(argv)

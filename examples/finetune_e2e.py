@@ -1,7 +1,8 @@
 """End-to-end driver: train a ~100M-param dense model for a few hundred
-steps with the FULL production substrate — MeSP engine, SGD, checkpointing
-with auto-resume, restartable data pipeline, straggler watchdog — then
-evaluate and greedy-decode from the fine-tuned model.
+steps with the FULL production substrate — a declarative TrainSpec run
+through the ``repro.api.Trainer`` facade (engine registry, SGD,
+checkpointing with auto-resume, restartable data pipeline, straggler
+watchdog) — then evaluate and greedy-decode from the fine-tuned model.
 
     PYTHONPATH=src python examples/finetune_e2e.py [--steps 300]
 
@@ -15,14 +16,11 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import Checkpointer
+from repro.api import Trainer, TrainSpec
 from repro.configs import get_config
 from repro.configs.base import LoRAConfig
-from repro.core import mesp
-from repro.data import make_batch_iterator
 from repro.models import model as M
-from repro.optim import sgd
-from repro.runtime.fault_tolerance import StragglerPolicy, run_resilient
+from repro.runtime.fault_tolerance import StragglerPolicy
 
 
 def build_cfg(tiny: bool):
@@ -45,24 +43,15 @@ def main():
     args = ap.parse_args()
 
     cfg = build_cfg(args.tiny)
-    n_params = cfg.n_params()
-    print(f"model: {cfg.n_layers}L d={cfg.d_model} ≈ {n_params/1e6:.0f}M params")
+    print(f"model: {cfg.n_layers}L d={cfg.d_model} "
+          f"≈ {cfg.n_params()/1e6:.0f}M params")
 
-    opt = sgd(5e-2)
-
-    def step(params, opt_state, batch):
-        loss, grads = mesp.value_and_grad(params, cfg, batch)
-        params, opt_state = opt.update(grads, opt_state, params)
-        return params, opt_state, loss
-
-    step = jax.jit(step)
-    data = make_batch_iterator(cfg.vocab, args.seq, args.batch,
-                               n_tokens=1 << 18, seed=11)
-    ckpt = Checkpointer(args.ckpt_dir, interval=100)
-
-    def init_state():
-        params = M.init_params(jax.random.PRNGKey(0), cfg)
-        return params, opt.init(params)
+    # a custom ArchConfig overrides the spec's arch/reduced resolution
+    spec = TrainSpec(engine="mesp", optimizer="sgd", lr=5e-2,
+                     steps=args.steps, seq=args.seq, batch=args.batch,
+                     seed=11, ckpt_dir=args.ckpt_dir, ckpt_interval=100,
+                     log_interval=25)
+    trainer = Trainer.from_spec(spec, cfg=cfg)
 
     t0 = time.monotonic()
     losses = []
@@ -73,14 +62,19 @@ def main():
             print(f"step {res.step:4d}  loss {res.loss:.4f}  "
                   f"{res.seconds:.2f}s/step")
 
-    params, opt_state, results = run_resilient(
-        step, init_state, data, ckpt, args.steps,
-        straggler=StragglerPolicy(factor=20.0), on_step=on_step)
+    result = trainer.fit(on_step=on_step,
+                         straggler=StragglerPolicy(factor=20.0))
     dt = time.monotonic() - t0
-    print(f"\ntrained {len(results)} steps in {dt:.0f}s; "
-          f"loss {losses[0]:.3f} → {sum(losses[-10:])/10:.3f}")
+    if losses:
+        tail = losses[-10:]
+        print(f"\ntrained {len(result.history)} steps in {dt:.0f}s; "
+              f"loss {losses[0]:.3f} → {sum(tail)/len(tail):.3f}")
+    else:  # checkpoint already covered all steps (resumed, nothing to do)
+        print(f"\nnothing to train: checkpoint in {args.ckpt_dir} already "
+              f"at step {args.steps}")
 
     # --- serve from the fine-tuned params -----------------------------------
+    params = result.params
     cache = M.init_cache(cfg, 1, 32)
     tok = jnp.array([[1]], jnp.int32)
     out = []

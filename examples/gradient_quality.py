@@ -1,34 +1,50 @@
 """Reproduce the paper's §5.6 analysis: why does MeZO converge slowly?
 
 Computes MeZO's SPSA gradient estimate and the exact (MeSP) gradient on the
-same batch and reports per-layer cosine similarity / sign agreement /
-relative error (paper Table 3), plus the variance scaling with parameter
-count (paper §3.2).
+same batch — both through the engine registry's ``value_and_grad`` hooks —
+and reports per-layer cosine similarity / sign agreement / relative error
+(paper Table 3), plus the variance scaling with parameter count (§3.2).
 
-    PYTHONPATH=src python examples/gradient_quality.py
+    PYTHONPATH=src python examples/gradient_quality.py [--smoke]
+
+``--smoke`` runs a scaled-down version (fewer layers / averaging samples)
+and finishes with a 3-step fine-tune through the ``repro.api.Trainer``
+facade — the CI gate for the declarative API path.
 """
+import argparse
 import dataclasses
+import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ExecutionPolicy, Trainer, TrainSpec, get_engine
 from repro.configs import get_config
-from repro.core import gradcheck, mesp, mezo
+from repro.core import gradcheck, mesp
 from repro.models import model as M
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="scaled-down run + Trainer-facade smoke fit (CI)")
+    args = ap.parse_args(argv)
+
+    n_layers = 4 if args.smoke else 8
     cfg = dataclasses.replace(get_config("qwen2.5-0.5b").reduced(),
-                              n_layers=8)
+                              n_layers=n_layers)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 48), 0, cfg.vocab)
     batch = {"tokens": tokens, "labels": tokens}
     for _ in range(5):  # warm up so LoRA B ≠ 0
         params, _ = mesp.train_step(params, cfg, batch, 5e-2)
 
-    _, g_true = mesp.value_and_grad(params, cfg, batch)
-    _, g_est = mezo.spsa_grad(params, cfg, batch, jax.random.PRNGKey(2))
+    mesp_eng, mezo_eng = get_engine("mesp"), get_engine("mezo")
+    policy = ExecutionPolicy()
+    _, g_true = mesp_eng.value_and_grad(params, cfg, batch, policy=policy)
+    _, g_est = mezo_eng.value_and_grad(params, cfg, batch, policy=policy,
+                                       key=jax.random.PRNGKey(2))
 
     print("layer | cosine sim | sign agree | rel. error   (paper Table 3)")
     rows = gradcheck.per_layer_metrics(g_est["blocks"], g_true["blocks"],
@@ -44,15 +60,28 @@ def main():
     # variance scaling: averaging K estimates improves cosine ~ sqrt(K)
     print("\nSPSA estimates averaged | cosine vs true")
     acc = None
-    for k in range(1, 33):
-        _, g = mezo.spsa_grad(params, cfg, batch, jax.random.PRNGKey(100 + k))
+    k_max = 4 if args.smoke else 32
+    marks = (1, 4) if args.smoke else (1, 4, 16, 32)
+    for k in range(1, k_max + 1):
+        _, g = mezo_eng.value_and_grad(params, cfg, batch, policy=policy,
+                                       key=jax.random.PRNGKey(100 + k))
         acc = g if acc is None else jax.tree_util.tree_map(jnp.add, acc, g)
-        if k in (1, 4, 16, 32):
+        if k in marks:
             m = gradcheck.gradient_metrics(
                 jax.tree_util.tree_map(lambda x: x / k, acc), g_true)
             print(f"{k:23d} | {float(m['cosine_sim']):+.4f}")
     print("\n→ single-sample MeZO directions are ≈ uncorrelated with the true "
           "gradient (paper's explanation for its slow convergence).")
+
+    if args.smoke:
+        # exercise the declarative path end-to-end: spec → Trainer → fit
+        spec = TrainSpec(arch="qwen2.5-0.5b", reduced=True, engine="mesp",
+                         lr=5e-2, steps=3, seq=32, batch=2,
+                         ckpt_dir=tempfile.mkdtemp(prefix="repro_gq_smoke_"))
+        result = Trainer.from_spec(spec).fit()
+        assert np.isfinite(result.final_loss)
+        print(f"\nTrainer smoke fit: {len(result.history)} steps, "
+              f"final loss {result.final_loss:.4f}")
 
 
 if __name__ == "__main__":

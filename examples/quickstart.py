@@ -1,18 +1,19 @@
-"""Quickstart: MeSP LoRA fine-tuning in ~50 lines.
+"""Quickstart: MeSP LoRA fine-tuning in ~50 lines, via ``repro.api``.
 
 Builds a reduced Qwen2.5-family model, verifies the paper's structured
 gradients match framework autodiff exactly — and that the int8-quantized
 pallas kernel path matches its dequant oracle — then fine-tunes the LoRA
-adapters.
+adapters through the Trainer facade.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import tempfile
+
 import jax
 import jax.numpy as jnp
 
+from repro.api import ExecutionPolicy, Trainer, TrainSpec, get_engine
 from repro.configs import get_config
-from repro.core import mebp, mesp
-from repro.data import make_batch_iterator
 from repro.models import model as M
 
 
@@ -22,14 +23,19 @@ def main():
     print(f"model: {cfg.name} (reduced) — {cfg.n_layers}L d={cfg.d_model} "
           f"LoRA r={cfg.lora.rank} on {cfg.lora.targets}")
 
-    # 2. params (frozen base + LoRA A/B) and a data stream
+    # 2. params (frozen base + LoRA A/B) and a probe batch
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    data = make_batch_iterator(cfg.vocab, seq_len=64, global_batch=4)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
 
-    # 3. sanity: MeSP's hand-derived gradients == autodiff gradients
-    batch = next(data)
-    _, g_mesp = mesp.value_and_grad(params, cfg, batch)
-    _, g_mebp = mebp.value_and_grad(params, cfg, batch)
+    # 3. sanity: MeSP's hand-derived gradients == autodiff gradients.
+    #    Engines come from the registry; the ExecutionPolicy selects the
+    #    backward regime each one threads through the model stack.
+    mesp, mebp = get_engine("mesp"), get_engine("mebp")
+    _, g_mesp = mesp.value_and_grad(params, cfg, batch,
+                                    policy=ExecutionPolicy())
+    _, g_mebp = mebp.value_and_grad(params, cfg, batch,
+                                    policy=ExecutionPolicy(backend="plain"))
     err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
         jax.tree_util.tree_leaves(g_mesp), jax.tree_util.tree_leaves(g_mebp)))
     print(f"max |MeSP_grad − autodiff_grad| = {err:.2e}  (paper §5.5)")
@@ -37,8 +43,10 @@ def main():
     # 3b. quantized base weights (--quantize int8): the dequant-in-VMEM
     # kernel path agrees with the structured path on the same int8 W0
     qparams = M.init_params(jax.random.PRNGKey(0), cfg, quantize="int8")
-    _, g_q = mesp.value_and_grad(qparams, cfg, batch, mode="pallas")
-    _, g_qs = mesp.value_and_grad(qparams, cfg, batch, mode="structured")
+    _, g_q = mesp.value_and_grad(qparams, cfg, batch,
+                                 policy=ExecutionPolicy(backend="pallas"))
+    _, g_qs = mesp.value_and_grad(qparams, cfg, batch,
+                                  policy=ExecutionPolicy())
     flat = lambda t: jnp.concatenate([x.reshape(-1) for x in
                                       jax.tree_util.tree_leaves(t)])
     rel = float(jnp.linalg.norm(flat(g_q) - flat(g_qs)) /
@@ -46,13 +54,14 @@ def main():
     print(f"int8 W0: pallas-kernel vs structured grad rel err = {rel:.2e}")
     assert rel <= 1e-5, "quantized kernel path diverged from structured"
 
-    # 4. fine-tune
-    step = jax.jit(lambda p, b: mesp.train_step(p, cfg, b, lr=5e-2))
-    for i in range(50):
-        params, loss = step(params, next(data))
-        if i % 10 == 0:
-            print(f"step {i:3d}  loss {float(loss):.4f}")
-    print(f"final loss {float(loss):.4f}")
+    # 4. fine-tune: one declarative spec, one facade call
+    spec = TrainSpec(arch="qwen2.5-0.5b", reduced=True, engine="mesp",
+                     lr=5e-2, steps=50, seq=64, batch=4,
+                     ckpt_dir=tempfile.mkdtemp(prefix="repro_quickstart_"))
+    result = Trainer.from_spec(spec).fit(
+        on_step=lambda r: r.step % 10 == 0 and print(
+            f"step {r.step:3d}  loss {r.loss:.4f}"))
+    print(f"final loss {result.final_loss:.4f}")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,15 @@
-"""CI guard: every ``--flag`` README.md attributes to the training launcher
-must actually be exposed by ``repro.launch.train``'s argument parser.
+"""CI guard: README.md must stay honest against the code.
 
-Scans fenced code blocks that invoke ``repro.launch.train`` and any prose
-line mentioning the launcher/"Flags", extracts ``--long-option`` tokens and
-diffs them against ``build_arg_parser()``. Exits non-zero (failing CI) on a
-README flag the parser doesn't know.
+Two checks:
+
+1. every ``--flag`` README.md attributes to the training launcher must
+   actually be exposed by ``repro.launch.train``'s argument parser (which is
+   generated from ``repro.api``);
+2. the "Engines × quantization" matrix must agree with the engine registry:
+   same engine set, same declared backend and ``--quantize`` support per
+   engine — so registering/changing an engine forces the docs to follow.
+
+Exits non-zero (failing CI) on any mismatch.
 
     PYTHONPATH=src python scripts/check_readme_flags.py
 """
@@ -15,6 +20,7 @@ import sys
 from pathlib import Path
 
 FLAG_RE = re.compile(r"(?<![\w-])--[a-z][a-z0-9-]*")
+TICK_RE = re.compile(r"`([^`]+)`")
 
 
 def readme_train_flags(text: str) -> set[str]:
@@ -30,28 +36,88 @@ def readme_train_flags(text: str) -> set[str]:
     return flags
 
 
+def readme_engine_matrix(text: str) -> dict[str, dict]:
+    """Parse the "## Engines × quantization" table into
+    {engine: {"backend": str|None, "quantize": set[str]}}.
+
+    Row convention: first cell = backticked engine name, second cell =
+    backticked backend (or — for engines with a custom regime), last cell =
+    backticked supported ``--quantize`` methods.
+    """
+    m = re.search(r"^## Engines × quantization$(.*?)(?=^## |\Z)", text,
+                  re.S | re.M)
+    if not m:
+        return {}
+    rows: dict[str, dict] = {}
+    for line in m.group(1).splitlines():
+        cells = [c.strip() for c in line.strip().strip("|").split("|")]
+        if len(cells) < 3 or not cells[0].startswith("`"):
+            continue  # prose, header, separator
+        name = TICK_RE.findall(cells[0])[0]
+        backend = (TICK_RE.findall(cells[1]) or [None])[0]
+        rows[name] = {"backend": backend,
+                      "quantize": set(TICK_RE.findall(cells[-1]))}
+    return rows
+
+
+def check_flags(text: str) -> list[str]:
+    from repro.launch.train import build_arg_parser
+    known = {opt for action in build_arg_parser()._actions
+             for opt in action.option_strings if opt.startswith("--")}
+    used = readme_train_flags(text)
+    if not used:
+        return ["README.md documents no repro.launch.train flags "
+                "(quickstart section missing?)"]
+    unknown = sorted(used - known)
+    if unknown:
+        return [f"README.md references launcher flags not exposed by "
+                f"`python -m repro.launch.train --help`: {unknown} "
+                f"(parser knows: {sorted(known)})"]
+    print(f"OK: {len(used)} README launcher flags all exposed by the parser "
+          f"({len(known)} known)")
+    return []
+
+
+def check_engine_matrix(text: str) -> list[str]:
+    from repro.api import list_engines
+    doc = readme_engine_matrix(text)
+    if not doc:
+        return ["README.md has no '## Engines × quantization' matrix"]
+    errors = []
+    registered = {e.name: e for e in list_engines()}
+    missing = sorted(set(registered) - set(doc))
+    stale = sorted(set(doc) - set(registered))
+    if missing:
+        errors.append(f"README engine matrix is missing registered "
+                      f"engines: {missing}")
+    if stale:
+        errors.append(f"README engine matrix lists unregistered engines: "
+                      f"{stale}")
+    for name in sorted(set(doc) & set(registered)):
+        eng, row = registered[name], doc[name]
+        if row["backend"] != eng.backend:
+            errors.append(f"engine {name!r}: README backend "
+                          f"{row['backend']!r} != registry {eng.backend!r}")
+        if row["quantize"] != set(eng.quantize):
+            errors.append(f"engine {name!r}: README quantize "
+                          f"{sorted(row['quantize'])} != registry "
+                          f"{sorted(eng.quantize)}")
+    if not errors:
+        print(f"OK: README engine matrix matches the registry "
+              f"({len(registered)} engines)")
+    return errors
+
+
 def main() -> int:
     readme = Path(__file__).resolve().parent.parent / "README.md"
     if not readme.exists():
         print(f"FAIL: {readme} does not exist")
         return 1
-    from repro.launch.train import build_arg_parser
-    known = {opt for action in build_arg_parser()._actions
-             for opt in action.option_strings if opt.startswith("--")}
-    used = readme_train_flags(readme.read_text())
-    if not used:
-        print("FAIL: README.md documents no repro.launch.train flags "
-              "(quickstart section missing?)")
-        return 1
-    unknown = sorted(used - known)
-    if unknown:
-        print(f"FAIL: README.md references launcher flags not exposed by "
-              f"`python -m repro.launch.train --help`: {unknown}")
-        print(f"      parser knows: {sorted(known)}")
-        return 1
-    print(f"OK: {len(used)} README launcher flags all exposed by the parser "
-          f"({len(known)} known)")
-    return 0
+    text = readme.read_text()
+    errors = check_flags(text) + check_engine_matrix(text)
+    for e in errors:
+        print(f"FAIL: {e}")
+    return 1 if errors else 0
 
 
 if __name__ == "__main__":

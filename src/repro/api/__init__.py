@@ -1,0 +1,45 @@
+"""repro.api: declarative TrainSpec + ExecutionPolicy + engine registry.
+
+Public surface (see docs/api.md):
+
+* :class:`~repro.api.spec.TrainSpec` — frozen description of a training run,
+  CLI round-trippable (``to_cli_args``/``from_cli_args``).
+* :class:`~repro.api.policy.ExecutionPolicy` — the single execution-regime
+  object threaded through ``core``/``models``/``kernels`` (backend,
+  quantize, act_spec, flash thresholds, remat, interpret).
+* :func:`~repro.api.registry.register_engine` / ``get_engine`` /
+  ``list_engines`` — the pluggable gradient-engine registry.
+* :class:`~repro.api.trainer.Trainer` — ``Trainer.from_spec(spec).fit()``.
+
+Exports resolve lazily (PEP 562) so that low-level modules can import
+``repro.api.policy`` without pulling the trainer stack (which itself imports
+the model stack) into their import graph.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "ExecutionPolicy": "policy", "BACKENDS": "policy",
+    "STRUCTURED": "policy", "PALLAS": "policy", "PLAIN": "policy",
+    "STORE_H": "policy",
+    "Engine": "registry", "UnknownEngineError": "registry",
+    "register_engine": "registry", "unregister_engine": "registry",
+    "get_engine": "registry", "list_engines": "registry",
+    "engine_names": "registry",
+    "TrainSpec": "spec", "build_arg_parser": "spec", "OPTIMIZERS": "spec",
+    "Trainer": "trainer", "TrainResult": "trainer",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(f"repro.api.{module}"), name)
+
+
+def __dir__():
+    return __all__

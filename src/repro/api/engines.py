@@ -1,0 +1,112 @@
+"""Built-in engine registrations.
+
+Importing this module (done lazily by the registry) registers the paper's
+engines: ``mesp`` (§4, production scan form), ``mesp_seq`` (§4.3 sequential
+loop with immediate optimizer updates), ``mesp_pallas`` (§4 fused into
+Pallas TPU kernels), ``mebp`` (§3.3 autodiff baseline), ``store_h``
+(Table 5 ablation) and ``mezo`` (§3.2 zeroth-order baseline).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.api.registry import register_engine
+
+
+def _grad_builder(spec, cfg, opt, policy):
+    """Shared step-builder for engines that are `mesp.value_and_grad` under
+    a specific ExecutionPolicy backend."""
+    from repro.core import mesp
+
+    def step(params, opt_state, batch):
+        loss, grads = mesp.value_and_grad(params, cfg, batch, policy=policy)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return step
+
+
+def _grad_vag(params, cfg, batch, *, policy, key=None):
+    from repro.core import mesp
+    return mesp.value_and_grad(params, cfg, batch, policy=policy)
+
+
+register_engine(
+    "mesp", backend="structured", memsim="mesp", paper="§4",
+    value_and_grad=_grad_vag,
+    description="MeSP: hand-derived structured backward (h recomputed), "
+                "scan-over-blocks form")(_grad_builder)
+
+register_engine(
+    "mesp_pallas", backend="pallas", memsim="mesp", paper="§4 + kernels",
+    value_and_grad=_grad_vag,
+    # AOT-lowering interpret-mode Pallas kernels for the 0.5B–3B paper
+    # models is not meaningful off-TPU; benchmarks/kernels.py covers this
+    # engine's perf trajectory instead.
+    benchmark=False,
+    description="MeSP with the structured rules fused into Pallas TPU "
+                "kernels (interpret mode off-TPU)")(_grad_builder)
+
+register_engine(
+    "mebp", backend="plain", memsim="mebp", paper="§3.3",
+    value_and_grad=_grad_vag,
+    description="MeBP baseline: per-block checkpointing + framework "
+                "autodiff")(_grad_builder)
+
+register_engine(
+    "store_h", backend="store_h", memsim="store_h", paper="Table 5",
+    value_and_grad=_grad_vag,
+    description="MeSP ablation: h = x@A stored instead of recomputed")(
+    _grad_builder)
+
+
+@register_engine(
+    "mesp_seq", backend="structured", memsim="mesp", paper="§4.3",
+    value_and_grad=_grad_vag,
+    description="MeSP, paper §4.3 verbatim: reverse Python loop over "
+                "blocks, SGD applied immediately per block (dense family)")
+def _mesp_seq_builder(spec, cfg, opt, policy):
+    from repro.core import mesp
+
+    if cfg.family != "dense" or cfg.window_pattern:
+        raise ValueError(
+            "engine mesp_seq (paper §4.3) supports dense, non-patterned "
+            f"architectures only — got family={cfg.family!r}")
+    if spec.optimizer != "sgd":
+        raise ValueError(
+            "engine mesp_seq applies immediate per-block SGD (paper §4.3); "
+            f"--optimizer {spec.optimizer!r} is not representable")
+    lr = spec.lr
+
+    def step(params, opt_state, batch):
+        params, loss = mesp.sequential_train_step(params, cfg, batch, lr,
+                                                  policy=policy)
+        return params, {**opt_state, "step": opt_state["step"] + 1}, loss
+
+    return step
+
+
+def _mezo_vag(params, cfg, batch, *, policy, key=None):
+    from repro.core import mezo
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return mezo.spsa_grad(params, cfg, batch, key)
+
+
+@register_engine(
+    "mezo", backend=None, memsim="mezo", paper="§3.2",
+    value_and_grad=_mezo_vag,
+    description="MeZO baseline: SPSA zeroth-order estimate from two plain "
+                "forward passes")
+def _mezo_builder(spec, cfg, opt, policy):
+    from repro.core import mezo
+
+    # perturbation stream derives from the spec's seed (folded per step)
+    base_key = jax.random.PRNGKey(spec.seed)
+
+    def step(params, opt_state, batch):
+        key = jax.random.fold_in(base_key, opt_state["step"])
+        loss, grads = mezo.spsa_grad(params, cfg, batch, key)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return step

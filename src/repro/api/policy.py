@@ -1,0 +1,70 @@
+"""ExecutionPolicy: the single object that selects *how* the model executes.
+
+Before this existed, the backward regime (``mode="structured"|"pallas"|...``),
+the activation sharding spec and the quantize method were threaded as loose
+kwargs through ``core/mesp.py`` → ``models/model.py`` → ``models/layers.py``
+→ ``kernels/ops.py`` (14 call sites).  ExecutionPolicy replaces all of them:
+every layer of the model stack takes one ``policy`` argument and reads the
+fields it cares about.
+
+The object is a *static* (hashable, frozen) configuration — it is closed
+over by jitted step functions, never traced.  Fields:
+
+* ``backend``       — backward regime for trainable-path ops:
+    - ``structured`` — the paper's hand-derived custom_vjp rules (MeSP),
+    - ``pallas``     — the same rules fused into Pallas TPU kernels,
+    - ``plain``      — framework autodiff (MeBP baseline),
+    - ``store_h``    — MeSP with ``h = x@A`` stored (paper Table 5 ablation).
+* ``quantize``      — frozen-W0 format the params were initialised with
+  (``none`` | ``int8``); carried so engines/launchers can validate support.
+* ``act_spec``      — block-boundary activation sharding constraint
+  (a ``PartitionSpec``), or None.
+* ``flash_min_seq`` — sequence length at/above which the structured backend
+  uses the chunked flash path instead of the dense sdpa.
+* ``flash_chunk``   — q/k chunk size for that flash path.
+* ``remat``         — per-block rematerialization (``jax.checkpoint`` around
+  the scan body, the paper's §4.3 store-block-inputs-only schedule).
+* ``interpret``     — force the Pallas interpreter on/off (None = auto:
+  interpret off-TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+#: valid ``backend`` values accepted throughout the model stack
+BACKENDS = ("structured", "pallas", "plain", "store_h")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    backend: str = "structured"
+    quantize: str = "none"
+    act_spec: Any = None
+    flash_min_seq: int = 1024
+    flash_chunk: int = 1024
+    remat: bool = True
+    interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"expected one of {BACKENDS}")
+
+    @classmethod
+    def from_mode(cls, mode: Optional[str] = None, act_spec=None,
+                  **kw) -> "ExecutionPolicy":
+        """Adapter for the legacy ``mode=`` string API (``core/mesp.py``
+        still accepts it for back-compat and folds it into a policy here)."""
+        return cls(backend=mode or "structured", act_spec=act_spec, **kw)
+
+    def with_(self, **kw) -> "ExecutionPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+#: shared default instances (module-level so identity-based jit caching of
+#: closures over them is maximally effective)
+STRUCTURED = ExecutionPolicy()
+PALLAS = ExecutionPolicy(backend="pallas")
+PLAIN = ExecutionPolicy(backend="plain")
+STORE_H = ExecutionPolicy(backend="store_h")

@@ -1,0 +1,117 @@
+"""Pluggable gradient-engine registry.
+
+An *engine* is one way of producing (loss, LoRA-grads) — or directly a
+parameter update — over the shared model stack: MeSP's structured backward,
+its Pallas-kernel form, the paper's §4.3 sequential loop, the MeBP autodiff
+baseline, the store-h ablation, MeZO's zeroth-order estimate, ...
+
+Each registration declares everything the rest of the system needs to offer
+the engine as a scenario:
+
+* ``build_step``     — step-builder used by the :class:`~repro.api.trainer.
+  Trainer` facade and ``launch/train.py``;
+* ``value_and_grad`` — uniform gradient hook used by ``benchmarks/memory.py``
+  (AOT memory measurement) and the gradient-quality tooling;
+* ``quantize``       — supported ``--quantize`` methods (validated by
+  TrainSpec/Trainer before any compute);
+* ``memsim``         — which analytical memory model in ``benchmarks/memsim``
+  describes the engine's retention behaviour;
+* ``benchmark``      — whether the benchmark harness sweeps it.
+
+Registering a new engine requires **zero edits** to ``launch/train.py``,
+``benchmarks/run.py`` or ``models/*``: CLI ``--engine`` choices, the
+benchmark ENGINES list and the README engine-matrix check are all generated
+from this registry (see docs/api.md for a walkthrough).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+
+class UnknownEngineError(KeyError):
+    """Raised by :func:`get_engine` for a name with no registration."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Engine:
+    """One registered gradient engine (see module docstring)."""
+    name: str
+    description: str
+    #: model-stack backend (an ExecutionPolicy.backend value) for engines
+    #: that differentiate through the model; None for engines with a custom
+    #: regime (e.g. mezo runs two plain forwards)
+    backend: Optional[str]
+    #: supported frozen-W0 formats (subset of core.quant.METHODS)
+    quantize: Tuple[str, ...]
+    #: analytical memory model in benchmarks/memsim describing this engine
+    memsim: str
+    #: (spec, cfg, opt, policy) -> step(params, opt_state, batch)
+    #:                                -> (params, opt_state, loss)
+    build_step: Callable
+    #: (params, cfg, batch, *, policy, key=None) -> (loss, grads-over-LoRA)
+    value_and_grad: Optional[Callable] = None
+    #: swept by benchmarks/run.py tables when True
+    benchmark: bool = True
+    #: paper section the engine reproduces (docs / README matrix)
+    paper: str = ""
+
+
+_REGISTRY: dict = {}
+_BUILTINS_LOADED = False
+
+
+def _ensure_builtins():
+    global _BUILTINS_LOADED
+    if not _BUILTINS_LOADED:
+        from repro.api import engines as _  # noqa: F401  (self-registers)
+        # only after a successful import: a failed one must surface its
+        # error on every call, not leave an empty registry behind
+        _BUILTINS_LOADED = True
+
+
+def register_engine(name: str, *, description: str, backend: Optional[str],
+                    quantize: Tuple[str, ...] = ("none", "int8"),
+                    memsim: str = "mesp", value_and_grad=None,
+                    benchmark: bool = True, paper: str = ""):
+    """Decorator over the engine's step-builder.
+
+    ``@register_engine("my_engine", backend="structured", ...)`` on a
+    function ``(spec, cfg, opt, policy) -> step`` registers the engine; the
+    decorated builder is returned unchanged.
+    """
+    def deco(build_step):
+        if name in _REGISTRY:
+            raise ValueError(f"engine {name!r} is already registered")
+        _REGISTRY[name] = Engine(
+            name=name, description=description, backend=backend,
+            quantize=tuple(quantize), memsim=memsim, build_step=build_step,
+            value_and_grad=value_and_grad, benchmark=benchmark, paper=paper)
+        return build_step
+
+    return deco
+
+
+def unregister_engine(name: str) -> None:
+    """Remove a registration (test hook — builtin engines should stay)."""
+    _REGISTRY.pop(name, None)
+
+
+def get_engine(name: str) -> Engine:
+    _ensure_builtins()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise UnknownEngineError(
+            f"unknown engine {name!r}; registered engines: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def list_engines() -> Tuple[Engine, ...]:
+    """All registrations, in registration order (= CLI choices order)."""
+    _ensure_builtins()
+    return tuple(_REGISTRY.values())
+
+
+def engine_names() -> Tuple[str, ...]:
+    return tuple(e.name for e in list_engines())

@@ -1,0 +1,143 @@
+"""TrainSpec: one frozen, declarative description of a training run.
+
+A TrainSpec carries everything ``launch/train.py`` used to thread as loose
+argparse values: architecture, engine, quantize method, optimizer/lr,
+seq/batch, seed, checkpoint cadence, plus sharding (``act_spec``) and kernel
+overrides.  It round-trips through the CLI (``to_cli_args`` /
+``from_cli_args``), so a spec is also a reproducible command line.
+
+The launcher's argument parser is *generated* here: ``--engine`` choices
+come from the engine registry and ``--quantize`` choices from
+``core.quant.METHODS`` — registering a new engine makes it a CLI choice with
+no launcher edits.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+from typing import Any, Optional, Tuple
+
+from repro.api.policy import ExecutionPolicy
+from repro.api.registry import get_engine, list_engines
+
+OPTIMIZERS = ("sgd", "sgd_momentum", "adamw")
+
+#: sentinel metadata marking fields that do not round-trip through the CLI
+_NO_CLI = {"cli": False}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSpec:
+    arch: str = "qwen2.5-0.5b"
+    reduced: bool = False
+    engine: str = "mesp"
+    quantize: str = "none"
+    optimizer: str = "sgd"
+    lr: float = 1e-4
+    steps: int = 100
+    batch: int = 1          # paper: batch 1
+    seq: int = 256          # paper: seq 256
+    seed: int = 0
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_interval: int = 50
+    log_interval: int = 10
+    # --- kernel / execution overrides (ExecutionPolicy fields) -------------
+    flash_min_seq: int = 1024
+    flash_chunk: int = 1024
+    pallas_interpret: Optional[bool] = None   # None = auto (off-TPU only)
+    # --- sharding: not CLI-serializable (PartitionSpec objects); set
+    # programmatically by the distributed launchers ------------------------
+    act_spec: Any = dataclasses.field(default=None, metadata=_NO_CLI)
+
+    # ------------------------------------------------------------------ API
+    def validate(self) -> "TrainSpec":
+        """Check engine/quantize/optimizer coherence against the registry.
+        Returns self so it chains; raises UnknownEngineError/ValueError."""
+        eng = get_engine(self.engine)
+        if self.quantize not in eng.quantize:
+            raise ValueError(
+                f"engine {self.engine!r} does not support "
+                f"--quantize {self.quantize!r} (supported: {eng.quantize})")
+        if self.optimizer not in OPTIMIZERS:
+            raise ValueError(f"unknown optimizer {self.optimizer!r}; "
+                             f"expected one of {OPTIMIZERS}")
+        return self
+
+    def policy(self) -> ExecutionPolicy:
+        """The ExecutionPolicy this spec's engine threads through the model
+        stack (engines with a custom regime, e.g. mezo, get ``plain``)."""
+        eng = get_engine(self.engine)
+        return ExecutionPolicy(
+            backend=eng.backend or "plain", quantize=self.quantize,
+            act_spec=self.act_spec, flash_min_seq=self.flash_min_seq,
+            flash_chunk=self.flash_chunk, interpret=self.pallas_interpret)
+
+    # ------------------------------------------------------- CLI round trip
+    def to_cli_args(self) -> list:
+        """Minimal argv reproducing this spec (non-default fields only).
+        ``act_spec`` is programmatic-only and never serialized."""
+        argv = []
+        for f in dataclasses.fields(self):
+            if not f.metadata.get("cli", True):
+                continue
+            val = getattr(self, f.name)
+            if val == f.default:
+                continue
+            flag = "--" + f.name.replace("_", "-")
+            if f.name == "reduced":
+                argv.append(flag)
+            elif f.name == "pallas_interpret":
+                argv += [flag, {True: "on", False: "off", None: "auto"}[val]]
+            else:
+                argv += [flag, repr(val) if isinstance(val, float) else
+                         str(val)]
+        return argv
+
+    @classmethod
+    def from_cli_args(cls, argv=None) -> "TrainSpec":
+        ns = build_arg_parser().parse_args(argv)
+        kw = {f.name: getattr(ns, f.name) for f in dataclasses.fields(cls)
+              if f.metadata.get("cli", True)}
+        kw["pallas_interpret"] = {"on": True, "off": False,
+                                  "auto": None}[kw["pallas_interpret"]]
+        return cls(**kw)
+
+
+def build_arg_parser() -> argparse.ArgumentParser:
+    """The training launcher's CLI, generated from the registry (importable:
+    scripts/check_readme_flags.py keeps README.md honest against it)."""
+    from repro.core.quant import METHODS as QUANT_METHODS
+
+    d = TrainSpec()
+    engines = list_engines()
+    ap = argparse.ArgumentParser(prog="repro.launch.train")
+    ap.add_argument("--arch", default=d.arch)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the tiny same-family config (CPU-runnable)")
+    ap.add_argument("--engine", default=d.engine,
+                    choices=[e.name for e in engines],
+                    help="gradient engine (registry-generated): " +
+                         "; ".join(f"{e.name} = {e.description}"
+                                   for e in engines))
+    ap.add_argument("--quantize", default=d.quantize,
+                    choices=list(QUANT_METHODS),
+                    help="frozen-base-weight format; per-engine support is "
+                         "declared in the registry and validated up front")
+    ap.add_argument("--optimizer", default=d.optimizer,
+                    choices=list(OPTIMIZERS))
+    ap.add_argument("--lr", type=float, default=d.lr)
+    ap.add_argument("--steps", type=int, default=d.steps)
+    ap.add_argument("--batch", type=int, default=d.batch)
+    ap.add_argument("--seq", type=int, default=d.seq)
+    ap.add_argument("--seed", type=int, default=d.seed)
+    ap.add_argument("--ckpt-dir", default=d.ckpt_dir)
+    ap.add_argument("--ckpt-interval", type=int, default=d.ckpt_interval)
+    ap.add_argument("--log-interval", type=int, default=d.log_interval)
+    ap.add_argument("--flash-min-seq", type=int, default=d.flash_min_seq,
+                    help="structured backend: min seq for the chunked "
+                         "flash path")
+    ap.add_argument("--flash-chunk", type=int, default=d.flash_chunk)
+    ap.add_argument("--pallas-interpret", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="force the Pallas interpreter (auto = off-TPU only)")
+    return ap

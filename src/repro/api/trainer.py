@@ -1,0 +1,106 @@
+"""Trainer facade: ``Trainer.from_spec(spec).fit(steps)``.
+
+Wraps everything a training run needs around a TrainSpec: config resolution,
+engine lookup + validation, optimizer, restartable data pipeline, atomic
+checkpointing and the fault-tolerant step driver
+(``runtime.fault_tolerance.run_resilient``).  ``launch/train.py``,
+``examples/finetune_e2e.py`` and the smoke CI all run through this facade.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Any, Callable, List, Optional
+
+import jax
+
+from repro.api.registry import Engine, get_engine
+from repro.api.spec import TrainSpec
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: Any
+    opt_state: Any
+    history: List  # of runtime.fault_tolerance.StepResult
+
+    @property
+    def final_loss(self) -> float:
+        return self.history[-1].loss if self.history else float("nan")
+
+
+class Trainer:
+    """One training run, fully described by a TrainSpec.
+
+    ``cfg`` overrides the spec's ``arch``/``reduced`` resolution with an
+    explicit ArchConfig (used by examples that build custom configs).
+    """
+
+    def __init__(self, spec: TrainSpec, *, cfg=None):
+        from repro.configs import get_config
+        from repro.optim import make_optimizer
+        from repro.optim.schedules import constant
+
+        self.spec = spec.validate()
+        self.engine: Engine = get_engine(spec.engine)
+        if cfg is None:
+            cfg = get_config(spec.arch)
+            if spec.reduced:
+                cfg = cfg.reduced()
+        self.cfg = cfg
+        self.policy = spec.policy()
+        self.opt = make_optimizer(spec.optimizer, constant(spec.lr))
+        self.step_fn = jax.jit(
+            self.engine.build_step(spec, cfg, self.opt, self.policy))
+
+    @classmethod
+    def from_spec(cls, spec: TrainSpec, *, cfg=None) -> "Trainer":
+        return cls(spec, cfg=cfg)
+
+    # ---------------------------------------------------------------- state
+    def init_state(self):
+        from repro.models import model as model_lib
+
+        params = model_lib.init_params(
+            jax.random.PRNGKey(self.spec.seed), self.cfg,
+            quantize=self.spec.quantize)
+        return params, self.opt.init(params)
+
+    def make_data(self):
+        from repro.data import make_batch_iterator
+
+        return make_batch_iterator(
+            self.cfg.vocab, self.spec.seq, self.spec.batch,
+            host_index=jax.process_index(), host_count=jax.process_count(),
+            seed=self.spec.seed)
+
+    # ------------------------------------------------------------------ fit
+    def fit(self, steps: Optional[int] = None, *,
+            data=None, on_step: Optional[Callable] = None,
+            straggler=None) -> TrainResult:
+        """Run ``steps`` (default: spec.steps) resilient training steps,
+        resuming from the latest checkpoint in ``spec.ckpt_dir`` if any."""
+        from repro.checkpoint import Checkpointer
+        from repro.runtime.fault_tolerance import StragglerPolicy, \
+            run_resilient
+
+        spec = self.spec
+        total = steps if steps is not None else spec.steps
+        it = data if data is not None else self.make_data()
+        ckpt = Checkpointer(spec.ckpt_dir, interval=spec.ckpt_interval)
+
+        def _log_step(res):
+            if res.step % spec.log_interval == 0:
+                log.info("step %5d  loss %.4f  %.3fs/step",
+                         res.step, res.loss, res.seconds)
+            if on_step:
+                on_step(res)
+
+        params, opt_state, history = run_resilient(
+            self.step_fn, self.init_state, it, ckpt, total,
+            straggler=straggler or StragglerPolicy(factor=10.0),
+            on_step=_log_step)
+        return TrainResult(params=params, opt_state=opt_state,
+                           history=history)

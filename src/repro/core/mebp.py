@@ -1,7 +1,7 @@
 """MeBP baseline (paper §3.3): gradient checkpointing + framework autodiff.
 
 Identical model, identical per-block checkpointing — but every inner op runs
-in ``mode="plain"`` (ordinary jnp), so the *framework* decides which tensors
+under the ``plain`` ExecutionPolicy backend (ordinary jnp), so the *framework* decides which tensors
 to retain during each block's backward: ``h = x@A`` is materialized, the
 attention probability matrix is materialized, normalized activations are
 saved, etc. The memory gap between this and MeSP is exactly the paper's
@@ -12,14 +12,15 @@ from __future__ import annotations
 
 import jax
 
+from repro.api.policy import PLAIN
 from repro.configs.base import ArchConfig
 from repro.core import mesp
 from repro.models import model as model_lib
 
 
 def value_and_grad(params, cfg: ArchConfig, batch: dict):
-    return mesp.value_and_grad(params, cfg, batch, mode="plain")
+    return mesp.value_and_grad(params, cfg, batch, policy=PLAIN)
 
 
 def train_step(params, cfg: ArchConfig, batch: dict, lr: float):
-    return mesp.train_step(params, cfg, batch, lr, mode="plain")
+    return mesp.train_step(params, cfg, batch, lr, policy=PLAIN)

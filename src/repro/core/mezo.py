@@ -13,6 +13,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.api.policy import PLAIN
 from repro.configs.base import ArchConfig
 from repro.models import model as model_lib
 
@@ -32,7 +33,7 @@ def spsa_grad(params, cfg: ArchConfig, batch: dict, key, eps: float = 1e-3):
 
     def loss(t):
         return model_lib.loss_fn(model_lib.merge_params(t, frozen), cfg, batch,
-                                 mode="plain")
+                                 policy=PLAIN)
 
     l_plus = loss(_perturb(train, key, +eps))
     l_minus = loss(_perturb(train, key, -eps))

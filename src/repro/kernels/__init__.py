@@ -12,7 +12,8 @@
                          a backward that recomputes probabilities from it
                          (paper §2's recompute-over-store principle). GQA is
                          grouped via kernel index maps — K/V never repeated.
-* ``ops``              — the dispatch layer behind ``mode="pallas"``: per-op
+* ``ops``              — the dispatch layer behind the ``pallas``
+  ExecutionPolicy backend: per-op
                          structured-jnp fallback on unsupported shapes,
                          interpret mode off-TPU, block sizes from
                          ``autotune`` (heuristic table + measured cache).

@@ -1,8 +1,9 @@
-"""Kernel dispatch layer: the single entry point for ``mode="pallas"``.
+"""Kernel dispatch layer: the single entry point for the ``pallas``
+ExecutionPolicy backend.
 
 ``models/layers.py`` (and through it every model family, ``core/mesp.py``,
 ``launch/train.py`` and the benchmarks) routes trainable-path ops here when
-the pallas mode is selected. Each public dispatcher:
+``policy.backend == "pallas"`` is selected. Each public dispatcher:
 
 * checks :func:`*_supported` for the given operands and falls back to the
   structured jnp path (``core/structured``) on unsupported shapes — per-op,
@@ -48,6 +49,16 @@ def pallas_interpret() -> bool:
     if env is not None:
         return env not in ("0", "false", "False")
     return jax.default_backend() != "tpu"
+
+
+def _resolve_interpret(policy, interpret):
+    """Dispatcher interpret resolution: explicit kwarg > policy override
+    (``ExecutionPolicy.interpret``) > backend autodetect."""
+    if interpret is not None:
+        return interpret
+    if policy is not None and policy.interpret is not None:
+        return policy.interpret
+    return pallas_interpret()
 
 
 # ---------------------------------------------------------------------------
@@ -144,17 +155,17 @@ def lora_supported(x, w0) -> bool:
 
 
 def lora_linear(x, w0, a, b, bias=None, scale: float = 2.0, *,
-                interpret=None):
+                policy=None, interpret=None):
     """Dispatch: Pallas LoRA linear, structured fallback on unsupported
     shapes (e.g. MoE per-expert [E,·,·] weights). ``w0`` may be a dense
     matrix or a quantized ``{"q", "scale"}`` leaf — quantized weights route
     to the dequant-in-VMEM kernels, falling back to the structured jnp path
-    on a dequantized copy (``core/quant.maybe_dequant``)."""
+    on a dequantized copy (``core/quant.maybe_dequant``). ``policy``
+    (ExecutionPolicy) supplies kernel overrides (interpret)."""
     if not lora_supported(x, w0):
         return structured.lora_linear(x, quant.maybe_dequant(w0, x.dtype),
                                       a, b, bias, scale)
-    if interpret is None:
-        interpret = pallas_interpret()
+    interpret = _resolve_interpret(policy, interpret)
     if quant.is_quantized(w0):
         y = lora_linear_kernel_q(x, w0["q"], w0["scale"], a, b, scale,
                                  interpret)
@@ -195,11 +206,9 @@ def _rn_bwd(eps, interpret, res, g):
 rmsnorm_kernel.defvjp(_rn_fwd, _rn_bwd)
 
 
-def rmsnorm(x, w, eps: float = 1e-6, *, interpret=None):
+def rmsnorm(x, w, eps: float = 1e-6, *, policy=None, interpret=None):
     """Dispatch: fused RMSNorm kernel (any row count — rows padded)."""
-    if interpret is None:
-        interpret = pallas_interpret()
-    return rmsnorm_kernel(x, w, eps, interpret)
+    return rmsnorm_kernel(x, w, eps, _resolve_interpret(policy, interpret))
 
 
 # ---------------------------------------------------------------------------
@@ -263,14 +272,14 @@ def attention_supported(q, k) -> bool:
     return Hkv >= 1 and H % Hkv == 0 and q.shape[2] >= PALLAS_ATTN_MIN_SEQ
 
 
-def sdpa(q, k, v, *, causal: bool = True, window: int = 0, interpret=None):
+def sdpa(q, k, v, *, causal: bool = True, window: int = 0, policy=None,
+         interpret=None):
     """Dispatch: flash kernel attention, structured sdpa fallback for short
     sequences / unsupported layouts."""
     if not attention_supported(q, k):
         return structured.sdpa(q, k, v, window, causal)
-    if interpret is None:
-        interpret = pallas_interpret()
-    return flash_attention(q, k, v, causal, window, interpret)
+    return flash_attention(q, k, v, causal, window,
+                           _resolve_interpret(policy, interpret))
 
 
 def flash_attention_kernel(q, k, v, *, causal: bool = True, window: int = 0,

@@ -22,6 +22,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.api import ExecutionPolicy  # noqa: E402
 from repro.configs import ASSIGNED, SHAPES, get_config, shape_applicable  # noqa: E402
 from repro.core import mesp  # noqa: E402
 from repro.launch import inputs as inp  # noqa: E402
@@ -32,13 +33,14 @@ from repro.optim import sgd  # noqa: E402
 from repro.roofline import analyze  # noqa: E402
 
 
-def build_train_fn(cfg, mesh, global_batch):
+def build_train_fn(cfg, mesh, global_batch, *, backend="structured"):
     """(train_step, in_shardings, out_shardings) for jit."""
     opt = sgd(1e-4)
-    act = sh.activation_spec(mesh, global_batch)
+    policy = ExecutionPolicy(backend=backend,
+                             act_spec=sh.activation_spec(mesh, global_batch))
 
     def train_step(params, opt_state, batch):
-        loss, grads = mesp.value_and_grad(params, cfg, batch, act_spec=act)
+        loss, grads = mesp.value_and_grad(params, cfg, batch, policy=policy)
         params, opt_state = opt.update(grads, opt_state, params)
         return params, opt_state, loss
 
@@ -46,7 +48,7 @@ def build_train_fn(cfg, mesh, global_batch):
 
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
-             mode: str = "structured", verbose: bool = True,
+             backend: str = "structured", verbose: bool = True,
              act_override=None):
     """Lower + compile one cell. Returns a result dict (or skip record)."""
     cfg = get_config(arch)
@@ -69,7 +71,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         if shape.kind in ("train", "prefill"):
             batch_struct, batch_shard = inp.train_batch_specs(cfg, shape, mesh)
             if shape.kind == "train":
-                step_fn, opt = build_train_fn(cfg, mesh, shape.global_batch)
+                step_fn, opt = build_train_fn(cfg, mesh, shape.global_batch,
+                                              backend=backend)
                 ostruct = jax.eval_shape(opt.init, pstruct)
                 oshard = sh.named(mesh, sh.opt_specs(cfg, ostruct, mesh))
                 lowered = jax.jit(
@@ -81,10 +84,11 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             else:  # prefill: forward pass producing logits
                 act = (sh.activation_spec(mesh, shape.global_batch)
                        if act_override is None else act_override)
+                policy = ExecutionPolicy(backend=backend, act_spec=act)
 
                 def fwd(params, batch):
                     return model_lib.loss_fn(params, cfg, batch,
-                                             mode=mode, act_spec=act)
+                                             policy=policy)
 
                 lowered = jax.jit(
                     fwd,

@@ -6,120 +6,37 @@ production mesh.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-0.5b \\
         --reduced --steps 100 --engine mesp --ckpt-dir /tmp/run1
+
+The CLI is generated from ``repro.api``: ``--engine`` choices come from the
+engine registry (registering a new engine adds it here with no edits to this
+file) and the whole invocation round-trips through
+:class:`repro.api.TrainSpec`. All run mechanics live in the
+:class:`repro.api.Trainer` facade.
 """
 from __future__ import annotations
 
-import argparse
 import logging
-import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.checkpoint import Checkpointer
-from repro.configs import get_config
-from repro.core import mebp, mesp, mezo, quant
-from repro.data import make_batch_iterator
-from repro.launch import sharding as sh
-from repro.launch.mesh import make_host_mesh
-from repro.models import model as model_lib
-from repro.optim import make_optimizer
-from repro.optim.schedules import constant
-from repro.runtime.fault_tolerance import StragglerPolicy, run_resilient
+from repro.api import Trainer, TrainSpec
+# re-exported: scripts/check_readme_flags.py and tests import the parser
+# from here, its historical home
+from repro.api import build_arg_parser  # noqa: F401
 
 log = logging.getLogger("repro.train")
 
 
-def build_step(cfg, engine: str, opt, act_spec=None):
-    if engine == "mezo":
-        def step(params, opt_state, batch):
-            key = jax.random.fold_in(jax.random.PRNGKey(0), opt_state["step"])
-            loss, grads = mezo.spsa_grad(params, cfg, batch, key)
-            params, opt_state = opt.update(grads, opt_state, params)
-            return params, opt_state, loss
-        return step
-
-    mode = {"mesp": "structured", "mesp_pallas": "pallas", "mebp": "plain",
-            "store_h": "store_h"}[engine]
-
-    def step(params, opt_state, batch):
-        loss, grads = mesp.value_and_grad(params, cfg, batch, mode=mode,
-                                          act_spec=act_spec)
-        params, opt_state = opt.update(grads, opt_state, params)
-        return params, opt_state, loss
-
-    return step
-
-
-def build_arg_parser() -> argparse.ArgumentParser:
-    """The launcher's CLI (importable: scripts/check_readme_flags.py keeps
-    README.md honest against it)."""
-    ap = argparse.ArgumentParser(prog="repro.launch.train")
-    ap.add_argument("--arch", default="qwen2.5-0.5b")
-    ap.add_argument("--reduced", action="store_true",
-                    help="use the tiny same-family config (CPU-runnable)")
-    ap.add_argument("--engine", default="mesp",
-                    choices=["mesp", "mesp_pallas", "mebp", "mezo",
-                             "store_h"],
-                    help="mesp_pallas = MeSP with the fused Pallas kernel "
-                         "path (interpret mode off-TPU)")
-    ap.add_argument("--quantize", default="none", choices=list(quant.METHODS),
-                    help="int8 = keep frozen base weights quantized "
-                         "(per-output-channel symmetric); with "
-                         "--engine mesp_pallas W0 is dequantized in VMEM, "
-                         "other engines dequantize in the jnp graph")
-    ap.add_argument("--optimizer", default="sgd",
-                    choices=["sgd", "sgd_momentum", "adamw"])
-    ap.add_argument("--lr", type=float, default=1e-4)
-    ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--batch", type=int, default=1)  # paper: batch 1
-    ap.add_argument("--seq", type=int, default=256)  # paper: seq 256
-    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
-    ap.add_argument("--ckpt-interval", type=int, default=50)
-    ap.add_argument("--log-interval", type=int, default=10)
-    ap.add_argument("--seed", type=int, default=0)
-    return ap
-
-
 def main(argv=None):
-    args = build_arg_parser().parse_args(argv)
+    spec = TrainSpec.from_cli_args(argv).validate()
 
     logging.basicConfig(level=logging.INFO)
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
+    trainer = Trainer.from_spec(spec)
+    cfg = trainer.cfg
     log.info("arch=%s layers=%d d_model=%d engine=%s quantize=%s",
-             cfg.name, cfg.n_layers, cfg.d_model, args.engine, args.quantize)
+             cfg.name, cfg.n_layers, cfg.d_model, spec.engine, spec.quantize)
 
-    opt = make_optimizer(args.optimizer, constant(args.lr))
-    step_fn = jax.jit(build_step(cfg, args.engine, opt))
-
-    it = make_batch_iterator(cfg.vocab, args.seq, args.batch,
-                             host_index=jax.process_index(),
-                             host_count=jax.process_count(),
-                             seed=args.seed)
-    ckpt = Checkpointer(args.ckpt_dir, interval=args.ckpt_interval)
-
-    def init_state():
-        params = model_lib.init_params(jax.random.PRNGKey(args.seed), cfg,
-                                       quantize=args.quantize)
-        return params, opt.init(params)
-
-    t_last = [time.monotonic()]
-
-    def on_step(res):
-        if res.step % args.log_interval == 0:
-            now = time.monotonic()
-            log.info("step %5d  loss %.4f  %.3fs/step",
-                     res.step, res.loss, res.seconds)
-            t_last[0] = now
-
-    params, opt_state, results = run_resilient(
-        step_fn, init_state, it, ckpt, args.steps,
-        straggler=StragglerPolicy(factor=10.0),
-        on_step=on_step)
+    result = trainer.fit()
     log.info("done: final loss %.4f over %d steps",
-             results[-1].loss, len(results))
+             result.final_loss, len(result.history))
     return 0
 
 

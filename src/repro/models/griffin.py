@@ -12,6 +12,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.api.policy import STRUCTURED, ExecutionPolicy
 from repro.configs.base import ArchConfig
 from repro.models import layers
 
@@ -76,19 +77,20 @@ def rg_lru(x, gates_r, gates_i, lam, state: Optional[jax.Array]):
     return h.astype(x.dtype), None
 
 
-def recurrent_block(p, x, cfg: ArchConfig, *, state=None, mode="structured"):
+def recurrent_block(p, x, cfg: ArchConfig, *, state=None,
+                    policy: ExecutionPolicy = STRUCTURED):
     """Griffin recurrent block. state: {"conv": [B,3,W], "lru": [B,W]}."""
-    xin = layers.norm(p["ln"], x, cfg, mode=mode)
-    main = layers.apply_linear(p["x_proj"], xin, cfg, mode=mode)
+    xin = layers.norm(p["ln"], x, cfg, policy=policy)
+    main = layers.apply_linear(p["x_proj"], xin, cfg, policy=policy)
     gate = layers.act_gelu(
-        layers.apply_linear(p["gate_proj"], xin, cfg, mode=mode), mode)
+        layers.apply_linear(p["gate_proj"], xin, cfg, policy=policy), policy)
     conv_state = None if state is None else state["conv"]
     main, conv_new = _causal_conv(main, p["conv_w"], p["conv_b"], conv_state)
-    gr = layers.apply_linear(p["rg_w"], main, cfg, mode=mode)
-    gi = layers.apply_linear(p["in_w"], main, cfg, mode=mode)
+    gr = layers.apply_linear(p["rg_w"], main, cfg, policy=policy)
+    gi = layers.apply_linear(p["in_w"], main, cfg, policy=policy)
     lru_state = None if state is None else state["lru"]
     h, lru_new = rg_lru(main, gr, gi, p["lam"], lru_state)
-    y = layers.apply_linear(p["out_proj"], h * gate, cfg, mode=mode)
+    y = layers.apply_linear(p["out_proj"], h * gate, cfg, policy=policy)
     new_state = None if state is None else {"conv": conv_new, "lru": lru_new}
     return x + y, new_state
 

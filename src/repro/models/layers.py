@@ -1,12 +1,14 @@
 """Shared model components (LoRA-adapted linears, attention, MLP, embeddings).
 
-All trainable-path ops route through ``repro.core.structured`` so that every
-backward pass in the framework is the paper's hand-derived one; with
-``mode="pallas"`` they route through the fused Pallas kernels instead
-(``repro.kernels.ops`` — same structured math, per-op fallback to the jnp
-path on unsupported shapes). Parameter pytrees are plain nested dicts;
-LoRA-adapted linears carry ``{"w", "a", "b" [, "bias"]}`` where
-``w``/``bias`` are frozen and ``a``/``b`` are trainable.
+All trainable-path ops take an :class:`repro.api.policy.ExecutionPolicy`
+(``policy``) selecting the backward regime: with the default ``structured``
+backend every backward pass is the paper's hand-derived one
+(``repro.core.structured``); ``pallas`` routes through the fused Pallas
+kernels instead (``repro.kernels.ops`` — same structured math, per-op
+fallback to the jnp path on unsupported shapes); ``plain`` is framework
+autodiff; ``store_h`` the Table 5 ablation. Parameter pytrees are plain
+nested dicts; LoRA-adapted linears carry ``{"w", "a", "b" [, "bias"]}``
+where ``w``/``bias`` are frozen and ``a``/``b`` are trainable.
 """
 from __future__ import annotations
 
@@ -15,6 +17,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.api.policy import STRUCTURED, ExecutionPolicy
 from repro.configs.base import ArchConfig
 from repro.core import structured
 from repro.core.flash import flash_attention
@@ -23,8 +26,9 @@ from repro.kernels import ops as kops
 
 Array = jax.Array
 
-# Sequence length at/above which the flash (chunked) path is used; below it
-# the dense structured sdpa is cheaper (and easier to cross-check).
+# Policy defaults for the flash threshold/chunking live on ExecutionPolicy
+# (flash_min_seq / flash_chunk); these module constants document the
+# defaults and seed them.
 FLASH_MIN_SEQ = 1024
 DEFAULT_CHUNK = 1024
 
@@ -40,12 +44,17 @@ def _split(key, n):
 
 def mesh_axis_size(axis) -> int:
     """Size of a physical-mesh axis (or axis tuple) at trace time; 1 when no
-    mesh context is installed (unit tests)."""
+    mesh context is installed (unit tests).
+
+    Reads the mesh context installed by ``with mesh:`` via the public
+    ``jax.interpreters.pxla.thread_resources`` handle (the supported
+    spelling of the old ``jax._src.mesh`` probe).
+    """
     if axis is None:
         return 1
     try:
-        from jax._src.mesh import thread_resources
-        mesh = thread_resources.env.physical_mesh
+        from jax.interpreters import pxla
+        mesh = pxla.thread_resources.env.physical_mesh
         if mesh.empty:
             return 1
         if isinstance(axis, (tuple, list)):
@@ -84,26 +93,28 @@ def linear_params(key, d_in: int, d_out: int, cfg: ArchConfig, *,
     return p
 
 
-def apply_linear(p, x, cfg: ArchConfig, *, mode: str = "structured"):
-    """LoRA linear. mode: "structured" (MeSP — h recomputed), "pallas"
-    (MeSP via fused TPU kernels), "store_h" (Table 5 ablation), "plain"
-    (MeBP — framework autodiff).
+def apply_linear(p, x, cfg: ArchConfig, *,
+                 policy: ExecutionPolicy = STRUCTURED):
+    """LoRA linear. ``policy.backend``: "structured" (MeSP — h recomputed),
+    "pallas" (MeSP via fused TPU kernels), "store_h" (Table 5 ablation),
+    "plain" (MeBP — framework autodiff).
 
     ``p["w"]`` is either a dense frozen matrix or an int8 ``{"q", "scale"}``
     leaf (``core/quant.quantize_frozen``). The pallas path hands the
     quantized leaf to the dequant-in-VMEM kernels; the jnp paths dequantize
     to a dense matrix first (``maybe_dequant``) — same math, W0 materialized.
     """
+    backend = policy.backend
     bias = p.get("bias")
     if "a" in p:
-        if mode == "pallas":
+        if backend == "pallas":
             return kops.lora_linear(x, p["w"], p["a"], p["b"], bias,
-                                    cfg.lora.scale)
+                                    cfg.lora.scale, policy=policy)
         w = maybe_dequant(p["w"], x.dtype)
-        if mode == "plain":
+        if backend == "plain":
             y = x @ w + cfg.lora.scale * ((x @ p["a"]) @ p["b"])
             return y + bias if bias is not None else y
-        fn = structured.lora_linear_store_h if mode == "store_h" \
+        fn = structured.lora_linear_store_h if backend == "store_h" \
             else structured.lora_linear
         return fn(x, w, p["a"], p["b"], bias, cfg.lora.scale)
     y = x @ maybe_dequant(p["w"], x.dtype)
@@ -112,24 +123,26 @@ def apply_linear(p, x, cfg: ArchConfig, *, mode: str = "structured"):
     return y
 
 
-def norm(p, x, cfg: ArchConfig, *, mode: str = "structured"):
+def norm(p, x, cfg: ArchConfig, *, policy: ExecutionPolicy = STRUCTURED):
     """RMSNorm: structured (residual = x, rms recomputed), pallas (fused
     kernel, same residual contract) or plain autodiff."""
-    if mode == "plain":
+    if policy.backend == "plain":
         xf = x.astype(jnp.float32)
         rms = jnp.sqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + cfg.norm_eps)
         return ((xf / rms) * p.astype(jnp.float32)).astype(x.dtype)
-    if mode == "pallas":
-        return kops.rmsnorm(x, p, cfg.norm_eps)
+    if policy.backend == "pallas":
+        return kops.rmsnorm(x, p, cfg.norm_eps, policy=policy)
     return structured.rmsnorm(x, p, cfg.norm_eps)
 
 
-def act_silu(x, mode: str):
-    return x * jax.nn.sigmoid(x) if mode == "plain" else structured.silu(x)
+def act_silu(x, policy: ExecutionPolicy):
+    return x * jax.nn.sigmoid(x) if policy.backend == "plain" \
+        else structured.silu(x)
 
 
-def act_gelu(x, mode: str):
-    return jax.nn.gelu(x, approximate=True) if mode == "plain" else structured.gelu(x)
+def act_gelu(x, policy: ExecutionPolicy):
+    return jax.nn.gelu(x, approximate=True) if policy.backend == "plain" \
+        else structured.gelu(x)
 
 
 # ---------------------------------------------------------------------------
@@ -178,7 +191,7 @@ def attention_params(key, cfg: ArchConfig, *, cross: bool = False,
 def attention(p, x, cfg: ArchConfig, *, window: int = 0, causal: bool = True,
               cache: Optional[dict] = None, pos: Array | int = 0,
               kv_x: Optional[Array] = None, use_rope: bool = True,
-              mode: str = "structured",
+              policy: ExecutionPolicy = STRUCTURED,
               shard=None) -> Tuple[Array, Optional[dict]]:
     """Multi-head attention with the structured backward.
 
@@ -190,9 +203,9 @@ def attention(p, x, cfg: ArchConfig, *, window: int = 0, causal: bool = True,
     src = x if kv_x is None else kv_x
     Nk = src.shape[1]
 
-    q = apply_linear(p["q"], x, cfg, mode=mode).reshape(B, N, cfg.n_heads, hd)
-    k = apply_linear(p["k"], src, cfg, mode=mode).reshape(B, Nk, cfg.n_kv_heads, hd)
-    v = apply_linear(p["v"], src, cfg, mode=mode).reshape(B, Nk, cfg.n_kv_heads, hd)
+    q = apply_linear(p["q"], x, cfg, policy=policy).reshape(B, N, cfg.n_heads, hd)
+    k = apply_linear(p["k"], src, cfg, policy=policy).reshape(B, Nk, cfg.n_kv_heads, hd)
+    v = apply_linear(p["v"], src, cfg, policy=policy).reshape(B, Nk, cfg.n_kv_heads, hd)
 
     if use_rope:
         qpos = jnp.arange(N) + pos
@@ -223,20 +236,20 @@ def attention(p, x, cfg: ArchConfig, *, window: int = 0, causal: bool = True,
             new_cache = {"k": kc, "v": vc, "len": cache["len"] + N}
             out = structured.sdpa(q, kc, vc, window, causal,
                                   cache["len"], cache["len"] + N)
-    elif mode == "plain":
+    elif policy.backend == "plain":
         out = structured._sdpa_ref(q, k, v, window, causal, 0, None)
-    elif mode == "pallas":
+    elif policy.backend == "pallas":
         # kernel flash attention (fwd + lse-driven bwd); falls back to the
         # structured sdpa for short sequences / unsupported layouts
-        out = kops.sdpa(q, k, v, causal=causal, window=window)
-    elif N >= FLASH_MIN_SEQ:
+        out = kops.sdpa(q, k, v, causal=causal, window=window, policy=policy)
+    elif N >= policy.flash_min_seq:
         out = flash_attention(q, k, v, window, causal,
-                              DEFAULT_CHUNK, DEFAULT_CHUNK)
+                              policy.flash_chunk, policy.flash_chunk)
     else:
         out = structured.sdpa(q, k, v, window, causal)
 
     out = out.transpose(0, 2, 1, 3).reshape(B, N, cfg.n_heads * hd)
-    return apply_linear(p["o"], out, cfg, mode=mode), new_cache
+    return apply_linear(p["o"], out, cfg, policy=policy), new_cache
 
 
 def _ring_attend(q, kc, vc, qpos, window: int):
@@ -296,13 +309,14 @@ def mlp_params(key, cfg: ArchConfig, d_ff: Optional[int] = None, *,
     return p
 
 
-def mlp(p, x, cfg: ArchConfig, *, mode: str = "structured"):
+def mlp(p, x, cfg: ArchConfig, *, policy: ExecutionPolicy = STRUCTURED):
     if "gate" in p:
-        g = apply_linear(p["gate"], x, cfg, mode=mode)
-        u = apply_linear(p["up"], x, cfg, mode=mode)
-        return apply_linear(p["down"], act_silu(g, mode) * u, cfg, mode=mode)
-    u = apply_linear(p["up"], x, cfg, mode=mode)
-    return apply_linear(p["down"], act_gelu(u, mode), cfg, mode=mode)
+        g = apply_linear(p["gate"], x, cfg, policy=policy)
+        u = apply_linear(p["up"], x, cfg, policy=policy)
+        return apply_linear(p["down"], act_silu(g, policy) * u, cfg,
+                            policy=policy)
+    u = apply_linear(p["up"], x, cfg, policy=policy)
+    return apply_linear(p["down"], act_gelu(u, policy), cfg, policy=policy)
 
 
 # ---------------------------------------------------------------------------

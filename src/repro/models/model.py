@@ -9,28 +9,26 @@ Layout conventions
 * Patterned stacks (gemma3 5:1 local:global, recurrentgemma R,R,A) scan over
   *groups* (one pattern period, params ``[n_groups, ...]``) so per-layer
   window sizes / block kinds stay static inside the group body.
-* ``mode`` selects the backward regime: "structured" (MeSP, hand-derived
-  custom_vjp rules), "pallas" (MeSP via the fused TPU kernels in
-  ``repro.kernels`` — same structured math, per-op fallback to the jnp path
-  on unsupported shapes/backends; interpret mode off-TPU), "plain" (MeBP,
-  framework autodiff), "store_h" (paper Table 5 ablation).
+* ``policy`` (:class:`repro.api.policy.ExecutionPolicy`) selects the
+  backward regime (``policy.backend``: "structured" = MeSP hand-derived
+  custom_vjp rules, "pallas" = MeSP via the fused TPU kernels in
+  ``repro.kernels``, "plain" = MeBP framework autodiff, "store_h" = paper
+  Table 5 ablation), the activation sharding constraint
+  (``policy.act_spec``) and the remat schedule (``policy.remat``).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.api.policy import BACKENDS, STRUCTURED, ExecutionPolicy  # noqa: F401  (BACKENDS re-exported)
 from repro.configs.base import ArchConfig
 from repro.core import quant, structured
 from repro.models import griffin, layers, moe as moe_lib, rwkv6
 
 Array = jax.Array
-
-#: valid ``mode`` values accepted throughout the model stack
-MODES = ("structured", "pallas", "plain", "store_h")
 
 
 # ---------------------------------------------------------------------------
@@ -38,25 +36,27 @@ MODES = ("structured", "pallas", "plain", "store_h")
 # ---------------------------------------------------------------------------
 
 
-def dense_block(bp, x, cfg, *, window=0, mode="structured", cache=None, pos=0,
-                shard=None):
+def dense_block(bp, x, cfg, *, window=0, policy: ExecutionPolicy = STRUCTURED,
+                cache=None, pos=0, shard=None):
     h, new_cache = layers.attention(
-        bp["attn"], layers.norm(bp["ln1"], x, cfg, mode=mode), cfg,
-        window=window, cache=cache, pos=pos, mode=mode, shard=shard)
+        bp["attn"], layers.norm(bp["ln1"], x, cfg, policy=policy), cfg,
+        window=window, cache=cache, pos=pos, policy=policy, shard=shard)
     x = x + h
-    x = x + layers.mlp(bp["mlp"], layers.norm(bp["ln2"], x, cfg, mode=mode),
-                       cfg, mode=mode)
+    x = x + layers.mlp(bp["mlp"],
+                       layers.norm(bp["ln2"], x, cfg, policy=policy),
+                       cfg, policy=policy)
     return x, new_cache
 
 
-def moe_block(bp, x, cfg, *, window=0, mode="structured", cache=None, pos=0,
-              shard=None):
+def moe_block(bp, x, cfg, *, window=0, policy: ExecutionPolicy = STRUCTURED,
+              cache=None, pos=0, shard=None):
     h, new_cache = layers.attention(
-        bp["attn"], layers.norm(bp["ln1"], x, cfg, mode=mode), cfg,
-        window=window, cache=cache, pos=pos, mode=mode, shard=shard)
+        bp["attn"], layers.norm(bp["ln1"], x, cfg, policy=policy), cfg,
+        window=window, cache=cache, pos=pos, policy=policy, shard=shard)
     x = x + h
-    x = x + moe_lib.moe_mlp(bp["moe"], layers.norm(bp["ln2"], x, cfg, mode=mode),
-                            cfg, mode=mode, shard=shard)
+    x = x + moe_lib.moe_mlp(bp["moe"],
+                            layers.norm(bp["ln2"], x, cfg, policy=policy),
+                            cfg, policy=policy, shard=shard)
     return x, new_cache
 
 
@@ -175,26 +175,6 @@ def init_params(key, cfg: ArchConfig, *, quantize: Optional[str] = None):
 # ---------------------------------------------------------------------------
 
 
-def _axis_size_of(axis):
-    """Mesh-axis size of an activation-spec entry at trace time (reads the
-    physical mesh context installed by ``with mesh:`` around the jit)."""
-    if axis is None:
-        return 1
-    try:
-        from jax._src.mesh import thread_resources
-        mesh = thread_resources.env.physical_mesh
-        if mesh.empty:
-            return 1
-        if isinstance(axis, (tuple, list)):
-            n = 1
-            for a in axis:
-                n *= mesh.shape[a]
-            return n
-        return mesh.shape[axis]
-    except Exception:
-        return 1
-
-
 def _constrain(x, act_spec):
     """Apply a block-boundary activation sharding constraint (Megatron SP:
     sequence on the model axis between blocks). No-op when act_spec is None."""
@@ -203,13 +183,13 @@ def _constrain(x, act_spec):
     return jax.lax.with_sharding_constraint(x, act_spec)
 
 
-def _scan_ckpt(body, x, stacked, act_spec=None):
+def _scan_ckpt(body, x, stacked, act_spec=None, remat=True):
     """scan over stacked block params with per-block rematerialization.
 
     Storing only the scan carry (= block inputs) is the paper's §4.3
     checkpoint strategy; ``act_spec`` shards those stored checkpoints.
     """
-    f = jax.checkpoint(body)
+    f = jax.checkpoint(body) if remat else body
 
     def step(c, bp):
         return _constrain(f(c, bp), act_spec), None
@@ -218,21 +198,23 @@ def _scan_ckpt(body, x, stacked, act_spec=None):
     return x
 
 
-def _encoder_forward(params, cfg, frames, mode):
+def _encoder_forward(params, cfg, frames, policy):
     """Whisper encoder over precomputed frame embeddings [B, T, d]."""
     pos = _sinusoid(frames.shape[1], cfg.d_model, frames.dtype)
     x = frames + pos
 
     def body(x, bp):
         h, _ = layers.attention(bp["attn"],
-                                layers.norm(bp["ln1"], x, cfg, mode=mode),
-                                cfg, causal=False, use_rope=False, mode=mode)
+                                layers.norm(bp["ln1"], x, cfg, policy=policy),
+                                cfg, causal=False, use_rope=False,
+                                policy=policy)
         x = x + h
-        return x + layers.mlp(bp["mlp"], layers.norm(bp["ln2"], x, cfg, mode=mode),
-                              cfg, mode=mode)
+        return x + layers.mlp(bp["mlp"],
+                              layers.norm(bp["ln2"], x, cfg, policy=policy),
+                              cfg, policy=policy)
 
-    x = _scan_ckpt(body, x, params["enc_blocks"])
-    return layers.norm(params["enc_norm"], x, cfg, mode=mode)
+    x = _scan_ckpt(body, x, params["enc_blocks"], remat=policy.remat)
+    return layers.norm(params["enc_norm"], x, cfg, policy=policy)
 
 
 def _sinusoid(n, d, dtype):
@@ -243,13 +225,12 @@ def _sinusoid(n, d, dtype):
 
 
 def forward(params, cfg: ArchConfig, tokens: Array, *,
-            mode: str = "structured",
+            policy: ExecutionPolicy = STRUCTURED,
             frontend_embeds: Optional[Array] = None,
-            enc_frames: Optional[Array] = None,
-            act_spec=None) -> Array:
+            enc_frames: Optional[Array] = None) -> Array:
     """Full-sequence forward -> logits [B, N(+frontend), vocab] (fp32)."""
-    if mode not in MODES:
-        raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+    act_spec = policy.act_spec
+    remat = policy.remat
     x = layers.embed(params["embed"], tokens, cfg)
     if frontend_embeds is not None:  # vlm: precomputed patch embeddings
         x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
@@ -257,7 +238,7 @@ def forward(params, cfg: ArchConfig, tokens: Array, *,
     shard = None
     if act_spec is not None:
         shard = {"dp": act_spec[0], "model": act_spec[1],
-                 "sp": _axis_size_of(act_spec[1])}
+                 "sp": layers.mesh_axis_size(act_spec[1])}
 
     fam = cfg.family
     if fam in ("dense", "vlm"):
@@ -268,30 +249,30 @@ def forward(params, cfg: ArchConfig, tokens: Array, *,
                 for i in range(gsz):
                     bp = jax.tree_util.tree_map(lambda t: t[i], gp)
                     x, _ = dense_block(bp, x, cfg,
-                                       window=cfg.window_pattern[i], mode=mode,
-                                       shard=shard)
+                                       window=cfg.window_pattern[i],
+                                       policy=policy, shard=shard)
                 return x
 
-            x = _scan_ckpt(gbody, x, params["groups"], act_spec)
+            x = _scan_ckpt(gbody, x, params["groups"], act_spec, remat)
         else:
             def body(x, bp):
-                return dense_block(bp, x, cfg, mode=mode, shard=shard)[0]
+                return dense_block(bp, x, cfg, policy=policy, shard=shard)[0]
 
-            x = _scan_ckpt(body, x, params["blocks"], act_spec)
+            x = _scan_ckpt(body, x, params["blocks"], act_spec, remat)
     elif fam == "moe":
         if "block0" in params:
-            x, _ = dense_block(params["block0"], x, cfg, mode=mode,
+            x, _ = dense_block(params["block0"], x, cfg, policy=policy,
                                shard=shard)
 
         def body(x, bp):
-            return moe_block(bp, x, cfg, mode=mode, shard=shard)[0]
+            return moe_block(bp, x, cfg, policy=policy, shard=shard)[0]
 
-        x = _scan_ckpt(body, x, params["blocks"], act_spec)
+        x = _scan_ckpt(body, x, params["blocks"], act_spec, remat)
     elif fam == "ssm":
         def body(x, bp):
-            return rwkv6.rwkv_block(bp, x, cfg, mode=mode)[0]
+            return rwkv6.rwkv_block(bp, x, cfg, policy=policy)[0]
 
-        x = _scan_ckpt(body, x, params["blocks"], act_spec)
+        x = _scan_ckpt(body, x, params["blocks"], act_spec, remat)
     elif fam == "hybrid":
         pat = cfg.hybrid.pattern
         gsz = len(pat)
@@ -300,56 +281,58 @@ def forward(params, cfg: ArchConfig, tokens: Array, *,
             for i in range(gsz):
                 bp = gp[f"l{i}"]
                 if pat[i] == "R":
-                    x, _ = griffin.recurrent_block(bp, x, cfg, mode=mode)
+                    x, _ = griffin.recurrent_block(bp, x, cfg, policy=policy)
                 else:
                     x, _ = dense_block(bp, x, cfg,
-                                       window=cfg.hybrid.window, mode=mode,
-                                       shard=shard)
+                                       window=cfg.hybrid.window,
+                                       policy=policy, shard=shard)
             return x
 
-        x = _scan_ckpt(gbody, x, params["groups"], act_spec)
+        x = _scan_ckpt(gbody, x, params["groups"], act_spec, remat)
         n_groups = jax.tree_util.tree_leaves(params["groups"])[0].shape[0]
         for i, bp in enumerate(params["tail"]):
             li = n_groups * gsz + i
             if pat[li % gsz] == "R":
-                x, _ = griffin.recurrent_block(bp, x, cfg, mode=mode)
+                x, _ = griffin.recurrent_block(bp, x, cfg, policy=policy)
             else:
                 x, _ = dense_block(bp, x, cfg, window=cfg.hybrid.window,
-                                   mode=mode)
+                                   policy=policy)
     elif fam == "audio":
         assert enc_frames is not None, "audio arch needs enc_frames"
-        enc_out = _encoder_forward(params, cfg, enc_frames, mode)
+        enc_out = _encoder_forward(params, cfg, enc_frames, policy)
         x = x + _sinusoid(x.shape[1], cfg.d_model, x.dtype)
 
         def body(x, bp):
             h, _ = layers.attention(bp["attn"],
-                                    layers.norm(bp["ln1"], x, cfg, mode=mode),
-                                    cfg, use_rope=False, mode=mode)
+                                    layers.norm(bp["ln1"], x, cfg,
+                                                policy=policy),
+                                    cfg, use_rope=False, policy=policy)
             x = x + h
             h, _ = layers.attention(bp["xattn"],
-                                    layers.norm(bp["lnx"], x, cfg, mode=mode),
+                                    layers.norm(bp["lnx"], x, cfg,
+                                                policy=policy),
                                     cfg, causal=False, kv_x=enc_out,
-                                    use_rope=False, mode=mode)
+                                    use_rope=False, policy=policy)
             x = x + h
             return x + layers.mlp(bp["mlp"],
-                                  layers.norm(bp["ln2"], x, cfg, mode=mode),
-                                  cfg, mode=mode)
+                                  layers.norm(bp["ln2"], x, cfg,
+                                              policy=policy),
+                                  cfg, policy=policy)
 
-        x = _scan_ckpt(body, x, params["blocks"], act_spec)
+        x = _scan_ckpt(body, x, params["blocks"], act_spec, remat)
     else:
         raise ValueError(fam)
 
-    x = layers.norm(params["final_norm"], x, cfg, mode=mode)
+    x = layers.norm(params["final_norm"], x, cfg, policy=policy)
     return layers.unembed(params["embed"], x, cfg)
 
 
 def loss_fn(params, cfg: ArchConfig, batch: dict, *,
-            mode: str = "structured", act_spec=None) -> Array:
+            policy: ExecutionPolicy = STRUCTURED) -> Array:
     """Mean next-token CE. batch: tokens/labels [B,N] (+frontend/frames)."""
-    logits = forward(params, cfg, batch["tokens"], mode=mode,
+    logits = forward(params, cfg, batch["tokens"], policy=policy,
                      frontend_embeds=batch.get("frontend_embeds"),
-                     enc_frames=batch.get("enc_frames"),
-                     act_spec=act_spec)
+                     enc_frames=batch.get("enc_frames"))
     labels = batch["labels"]
     if cfg.frontend_tokens and batch.get("frontend_embeds") is not None:
         # frontend prefix carries no labels
@@ -423,7 +406,8 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int):
 
 def decode_step(params, cfg: ArchConfig, cache, tokens: Array):
     """One decode step. tokens: [B, 1]. Returns (logits [B,1,V], new cache)."""
-    mode = "structured"  # inference: custom_vjp fwd == plain fwd
+    # inference: the structured custom_vjp forwards == plain forwards
+    policy = STRUCTURED
     x = layers.embed(params["embed"], tokens, cfg)
     fam = cfg.family
     new_cache = dict(cache)
@@ -520,7 +504,7 @@ def decode_step(params, cfg: ArchConfig, cache, tokens: Array):
     else:
         raise ValueError(fam)
 
-    x = layers.norm(params["final_norm"], x, cfg)
+    x = layers.norm(params["final_norm"], x, cfg, policy=policy)
     return layers.unembed(params["embed"], x, cfg), new_cache
 
 

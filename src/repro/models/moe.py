@@ -24,6 +24,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.api.policy import STRUCTURED, ExecutionPolicy
 from repro.configs.base import ArchConfig
 from repro.models import layers
 
@@ -70,7 +71,8 @@ def _maybe_constrain(x, spec):
     return jax.lax.with_sharding_constraint(x, spec)
 
 
-def moe_mlp(p, x, cfg: ArchConfig, *, mode: str = "structured", shard=None):
+def moe_mlp(p, x, cfg: ArchConfig, *,
+            policy: ExecutionPolicy = STRUCTURED, shard=None):
     """x: [B, N, d] -> [B, N, d].
 
     ``shard``: optional dict {"dp": axes, "model": axis} enabling explicit
@@ -126,7 +128,7 @@ def moe_mlp(p, x, cfg: ArchConfig, *, mode: str = "structured", shard=None):
         # expert dim on model, token rows on DP: one all-to-all pair/layer
         ebuf = _maybe_constrain(ebuf, P(shard["model"], dp, None))
 
-    store_h = mode == "store_h"
+    store_h = policy.backend == "store_h"
 
     def elin(q, z):
         # per-expert [E,·,·] weights: structured jnp path in every mode
@@ -135,14 +137,14 @@ def moe_mlp(p, x, cfg: ArchConfig, *, mode: str = "structured", shard=None):
         from repro.core.quant import maybe_dequant
         w = maybe_dequant(q["w"], z.dtype)
         if "a" in q:
-            if mode == "plain":
+            if policy.backend == "plain":
                 return z @ w + cfg.lora.scale * ((z @ q["a"]) @ q["b"])
             fn = structured.lora_linear_store_h if store_h \
                 else structured.lora_linear
             return fn(z, w, q["a"], q["b"], None, cfg.lora.scale)
         return z @ w
 
-    hidden = layers.act_silu(elin(p["gate"], ebuf), mode) * elin(p["up"], ebuf)
+    hidden = layers.act_silu(elin(p["gate"], ebuf), policy) * elin(p["up"], ebuf)
     y_ebuf = elin(p["down"], hidden)                         # [E, B·C, d]
 
     # --- return path: reshard back to groups, gather, combine --------------
@@ -162,7 +164,7 @@ def moe_mlp(p, x, cfg: ArchConfig, *, mode: str = "structured", shard=None):
     out = jnp.sum(out_slots, axis=3).reshape(B, N, d)
 
     if "shared" in p:
-        out = out + layers.mlp(p["shared"], x, cfg, mode=mode)
+        out = out + layers.mlp(p["shared"], x, cfg, policy=policy)
     return out
 
 

@@ -19,6 +19,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.api.policy import STRUCTURED, ExecutionPolicy
 from repro.configs.base import ArchConfig
 from repro.models import layers
 
@@ -121,7 +122,8 @@ def wkv_step(r, k, v, logw, u, state):
     return y, state
 
 
-def time_mix(p, x, cfg: ArchConfig, *, state=None, mode="structured"):
+def time_mix(p, x, cfg: ArchConfig, *, state=None,
+             policy: ExecutionPolicy = STRUCTURED):
     """x: [B,N,d]. state (decode): {"shift": [B,d], "wkv": [B,H,D,D]}."""
     B, N, d = x.shape
     H = cfg.n_heads
@@ -129,11 +131,11 @@ def time_mix(p, x, cfg: ArchConfig, *, state=None, mode="structured"):
     xx = _token_shift(x, None if state is None else state["shift"])
     mu = p["mu"]
     mix = lambda i: x + (xx - x) * mu[i]
-    r = layers.apply_linear(p["r"], mix(0), cfg, mode=mode)
-    k = layers.apply_linear(p["k"], mix(1), cfg, mode=mode)
-    v = layers.apply_linear(p["v"], mix(2), cfg, mode=mode)
-    g = layers.act_silu(layers.apply_linear(p["g"], mix(3), cfg, mode=mode), mode)
-    logw = -jnp.exp((layers.apply_linear(p["w"], mix(4), cfg, mode=mode)
+    r = layers.apply_linear(p["r"], mix(0), cfg, policy=policy)
+    k = layers.apply_linear(p["k"], mix(1), cfg, policy=policy)
+    v = layers.apply_linear(p["v"], mix(2), cfg, policy=policy)
+    g = layers.act_silu(layers.apply_linear(p["g"], mix(3), cfg, policy=policy), policy)
+    logw = -jnp.exp((layers.apply_linear(p["w"], mix(4), cfg, policy=policy)
                      + p["w0"]).astype(jnp.float32))
 
     hd = lambda t: t.reshape(B, N, H, D)
@@ -148,34 +150,36 @@ def time_mix(p, x, cfg: ArchConfig, *, state=None, mode="structured"):
         y = y1[:, None].reshape(B, N, H, D)
         new_state = {"shift": x[:, -1], "wkv": wkv}
     # per-head group norm then gate
-    yn = layers.norm(jnp.ones((D,), y.dtype), y.astype(x.dtype), cfg, mode=mode)
+    yn = layers.norm(jnp.ones((D,), y.dtype), y.astype(x.dtype), cfg, policy=policy)
     yn = (yn.reshape(B, N, d) * p["gn"]) * g
-    return layers.apply_linear(p["o"], yn, cfg, mode=mode), new_state
+    return layers.apply_linear(p["o"], yn, cfg, policy=policy), new_state
 
 
-def channel_mix(p, x, cfg: ArchConfig, *, state=None, mode="structured"):
+def channel_mix(p, x, cfg: ArchConfig, *, state=None,
+                policy: ExecutionPolicy = STRUCTURED):
     xx = _token_shift(x, None if state is None else state)
     mu = p["mu"]
     xk = x + (xx - x) * mu[0]
     xr = x + (xx - x) * mu[1]
-    kk = layers.apply_linear(p["k"], xk, cfg, mode=mode)
+    kk = layers.apply_linear(p["k"], xk, cfg, policy=policy)
     kk = jnp.square(jax.nn.relu(kk))
-    vv = layers.apply_linear(p["v"], kk, cfg, mode=mode)
-    rr = jax.nn.sigmoid(layers.apply_linear(p["r"], xr, cfg, mode=mode))
+    vv = layers.apply_linear(p["v"], kk, cfg, policy=policy)
+    rr = jax.nn.sigmoid(layers.apply_linear(p["r"], xr, cfg, policy=policy))
     new_state = None if state is None else x[:, -1]
     return rr * vv, new_state
 
 
-def rwkv_block(p, x, cfg: ArchConfig, *, state=None, mode="structured"):
+def rwkv_block(p, x, cfg: ArchConfig, *, state=None,
+               policy: ExecutionPolicy = STRUCTURED):
     """Returns (x_out, new_state). state: {"shift_tm","wkv","shift_cm"}."""
     tm_state = None if state is None else {"shift": state["shift_tm"],
                                            "wkv": state["wkv"]}
-    h, tm_new = time_mix(p["tm"], layers.norm(p["ln1"], x, cfg, mode=mode),
-                         cfg, state=tm_state, mode=mode)
+    h, tm_new = time_mix(p["tm"], layers.norm(p["ln1"], x, cfg, policy=policy),
+                         cfg, state=tm_state, policy=policy)
     x = x + h
-    h, cm_new = channel_mix(p["cm"], layers.norm(p["ln2"], x, cfg, mode=mode),
+    h, cm_new = channel_mix(p["cm"], layers.norm(p["ln2"], x, cfg, policy=policy),
                             cfg, state=None if state is None else state["shift_cm"],
-                            mode=mode)
+                            policy=policy)
     x = x + h
     new_state = None
     if state is not None:
