@@ -9,7 +9,15 @@ vs ``pallas`` fused kernels) plus per-op microbenchmarks, and writes
 run under the Pallas interpreter — those numbers track *correctness cost*
 only and are flagged ``interpret: true`` in the JSON; real speedups are a
 TPU measurement. With ``REPRO_AUTOTUNE=1`` the per-op section sweeps the
-autotuner's candidate block sizes and records the measured winners.
+autotuner's candidate block sizes, records the measured winners and
+persists them to the checked-in per-backend cache
+(``kernels/autotune_cache/<backend>.json``).
+
+The ``attention_sparse_grid`` section carries the *measured* sparse-grid
+accounting: live/interior/boundary tile counts and grid fraction straight
+from the trace-time schedule (deterministic — what
+``scripts/check_bench_regression.py`` guards), plus sparse-vs-dense-grid
+wall clock and the effective FLOP throughput over live tiles.
 """
 from __future__ import annotations
 
@@ -125,7 +133,7 @@ def bench_ops():
     n_jnp = jax.jit(lambda x: structured.rmsnorm(x, w))
     out["rmsnorm_fwd"] = {"pallas_ms": _time(n_pl, x) * 1e3,
                           "structured_ms": _time(n_jnp, x) * 1e3}
-    # flash attention fwd+bwd
+    # flash attention fwd+bwd (sparse grid, through the dispatch custom_vjp)
     B, H, Hkv, Nq, D = 1, 4, 2, 512, 64
     q = jax.random.normal(key, (B, H, Nq, D)) * 0.3
     kk = jax.random.normal(key, (B, Hkv, Nq, D)) * 0.3
@@ -136,8 +144,10 @@ def bench_ops():
         structured.sdpa(q, kk, vv, 0, True))))
     out["attention_grad"] = {"pallas_ms": _time(a_pl, q) * 1e3,
                              "structured_ms": _time(a_jnp, q) * 1e3}
+    out["attention_sparse_grid"] = bench_sparse_grid(interp)
 
     if os.environ.get("REPRO_AUTOTUNE") == "1":
+        from repro.kernels import flash_attention as fa
         from repro.kernels.lora_fused import lora_fused
         cands = [{"bm": bm, "bn": bn, "bk": bk}
                  for bm in (128, 256) for bn in (128, 256)
@@ -147,7 +157,79 @@ def bench_ops():
             lambda blk: lora_fused(x, w0, a, b, 2.0, interpret=interp, **blk),
             candidates=cands, M=M_, K=K, N=N)
         out["autotuned_lora_fused_blocks"] = best
+        qf = q.reshape(B * H, Nq, D)
+        kf, vf = kk.reshape(B * Hkv, Nq, D), vv.reshape(B * Hkv, Nq, D)
+        best_flash = autotune.autotune(
+            "flash",
+            lambda blk: fa.flash_attention_fwd(
+                qf, kf, vf, causal=True, window=0, q_per_kv=H // Hkv,
+                interpret=interp, **blk),
+            candidates=[{"bq": a_, "bk": b_} for a_ in (128, 256)
+                        for b_ in (128, 256)],
+            Nq=Nq, Nk=Nq, D=D, causal=1, window=0)
+        out["autotuned_flash_blocks"] = best_flash
+        out["autotune_cache_written"] = autotune.save_cache()
     return out
+
+
+def bench_sparse_grid(interp: bool, Nq: int = 1024, window: int = 0):
+    """Sparse vs dense tile grid on a long causal sequence: schedule
+    accounting (deterministic) + measured fwd+bwd wall clock + effective
+    FLOP throughput over the live tiles. Also measures fused-RoPE vs
+    pre-rotated q/k through the same kernel."""
+    from repro.kernels import flash_attention as fa
+    from repro.kernels.rope import apply_rope_tables, rope_tables
+    from repro.kernels.tiling import flash_schedule_stats
+
+    B, H, Hkv, D = 1, 4, 2, 64
+    bq = bk = 128
+    key = jax.random.PRNGKey(2)
+    q = jax.random.normal(key, (B * H, Nq, D)) * 0.3
+    k = jax.random.normal(key, (B * Hkv, Nq, D)) * 0.3
+    v = jax.random.normal(key, (B * Hkv, Nq, D)) * 0.3
+    g = jax.random.normal(key, (B * H, Nq, D)) * 0.3
+    kw = dict(causal=True, window=window, bq=bq, bk=bk, q_per_kv=H // Hkv,
+              interpret=interp)
+
+    def fwdbwd(sparse):
+        def run(q, k, v, g):
+            out, lse = fa.flash_attention_fwd(q, k, v, return_lse=True,
+                                              sparse=sparse, **kw)
+            dq, dk, dv = fa.flash_attention_bwd(q, k, v, out, lse, g,
+                                                sparse=sparse, **kw)
+            return out, dq, dk, dv
+        return jax.jit(run)
+
+    sparse_ms = _time(fwdbwd(True), q, k, v, g) * 1e3
+    dense_ms = _time(fwdbwd(False), q, k, v, g) * 1e3
+
+    st = flash_schedule_stats(Nq, Nq, bq, bk, True, window)
+    # per live tile and head: fwd s/pv (2 matmuls), bwd-dq s/dp/dq (3),
+    # bwd-dkv s/dp/dv/dk (4) — 9 [bq,bk]×[bk,D]-class matmuls at 2·bq·bk·D
+    eff_flops = B * H * st["live_tiles"] * 18 * st["bq"] * st["bk"] * D
+    dense_flops = B * H * st["dense_tiles"] * 18 * st["bq"] * st["bk"] * D
+
+    cos, sin = rope_tables(jnp.arange(Nq), 10000.0, D)
+    f_fused = jax.jit(lambda q, k, v: fa.flash_attention_fwd(
+        q, k, v, (cos, sin), **kw))
+    f_prerot = jax.jit(lambda q, k, v: fa.flash_attention_fwd(
+        apply_rope_tables(q, cos, sin), apply_rope_tables(k, cos, sin),
+        v, **kw))
+    fused_ms = _time(f_fused, q, k, v) * 1e3
+    prerot_ms = _time(f_prerot, q, k, v) * 1e3
+
+    return {
+        "shape": {"B": B, "H": H, "Hkv": Hkv, "Nq": Nq, "D": D,
+                  "causal": True, "window": window},
+        **st,
+        "sparse_fwdbwd_ms": sparse_ms,
+        "dense_fwdbwd_ms": dense_ms,
+        "dense_over_sparse": dense_ms / sparse_ms,
+        "effective_tflops": eff_flops / (sparse_ms * 1e-3) / 1e12,
+        "dense_grid_tflops": dense_flops / (dense_ms * 1e-3) / 1e12,
+        "rope_fused_fwd_ms": fused_ms,
+        "rope_prerotated_fwd_ms": prerot_ms,
+    }
 
 
 def run_and_write(steps: int = 5, out: str = DEFAULT_OUT) -> dict:

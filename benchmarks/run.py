@@ -270,6 +270,27 @@ def kernels_bench(steps: int = 3):
     emit("kernels/int8_over_bf16_pallas",
          f"{step['int8_over_bf16_pallas']:.3f}")
 
+    sg = result["per_op"].get("attention_sparse_grid")
+    if sg:
+        report("\n### Sparse-grid flash attention (causal, "
+               f"Nq={sg['shape']['Nq']}, bq=bk={sg['bq']})")
+        report("| live tiles | dense tiles | grid fraction | interior | "
+               "boundary | sparse fwd+bwd ms | dense fwd+bwd ms | "
+               "eff TFLOP/s |")
+        report("|---|---|---|---|---|---|---|---|")
+        report(f"| {sg['live_tiles']} | {sg['dense_tiles']} | "
+               f"{sg['grid_fraction']:.3f} | {sg['interior_tiles']} | "
+               f"{sg['boundary_tiles']} | {sg['sparse_fwdbwd_ms']:.2f} | "
+               f"{sg['dense_fwdbwd_ms']:.2f} | "
+               f"{sg['effective_tflops']:.4f} |")
+        emit("kernels/flash/grid_fraction", f"{sg['grid_fraction']:.3f}",
+             f"live={sg['live_tiles']}/{sg['dense_tiles']}")
+        emit("kernels/flash/dense_over_sparse",
+             f"{sg['dense_over_sparse']:.3f}")
+        emit("kernels/flash/rope_fused_fwd_ms",
+             f"{sg['rope_fused_fwd_ms']:.2f}",
+             f"prerotated={sg['rope_prerotated_fwd_ms']:.2f}")
+
 
 # ------------------------------------------------------------------ quant
 def table_quant():

@@ -1,0 +1,95 @@
+"""CI guard: the sparse-grid flash kernels must stay sparse.
+
+Compares a freshly produced ``BENCH_kernels.json`` against the committed
+baseline (``benchmarks/results/BENCH_kernels.json``) on the *deterministic*
+sparse-grid columns — live/interior/boundary tile counts, grid fraction and
+the effective-FLOPs accounting derived from them. A schedule regression
+(> ``TOLERANCE`` more live tiles / higher grid fraction than the baseline,
+i.e. the kernels started launching dead tiles again) fails CI.
+
+Wall-clock columns are *not* gated: on non-TPU runners the kernels execute
+under the Pallas interpreter (``"interpret": true`` in the JSON), where
+timing measures the emulation, not the hardware. Those columns are printed
+as annotations only; the committed baseline records which mode produced it.
+
+    PYTHONPATH=src python -m benchmarks.kernels --steps 2 --out /tmp/f.json
+    PYTHONPATH=src python scripts/check_bench_regression.py /tmp/f.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+BASELINE = (Path(__file__).resolve().parent.parent / "benchmarks" /
+            "results" / "BENCH_kernels.json")
+
+#: fractional worsening allowed before failing (a schedule is deterministic,
+#: so any change at all is suspicious — 10% leaves room for deliberate
+#: block-size retuning that slightly shifts the tile grid)
+TOLERANCE = 0.10
+
+#: sparse-grid columns where *larger* is a regression
+GATED_UP = ("live_tiles", "boundary_tiles", "grid_fraction")
+#: annotation-only wall-clock columns
+ANNOTATE = ("sparse_fwdbwd_ms", "dense_fwdbwd_ms", "dense_over_sparse",
+            "effective_tflops", "rope_fused_fwd_ms",
+            "rope_prerotated_fwd_ms")
+
+
+def _sg(doc: dict, name: str) -> dict:
+    try:
+        return doc["per_op"]["attention_sparse_grid"]
+    except KeyError:
+        raise SystemExit(f"FAIL: {name} has no per_op.attention_sparse_grid "
+                         f"section — did benchmarks/kernels.py run?")
+
+
+def check(fresh_doc: dict, base_doc: dict) -> list[str]:
+    fresh, base = _sg(fresh_doc, "fresh"), _sg(base_doc, "baseline")
+    errors = []
+    if fresh.get("shape") != base.get("shape"):
+        print(f"note: bench shape changed {base.get('shape')} -> "
+              f"{fresh.get('shape')}; comparing fractions only")
+        gated = ("grid_fraction",)
+    else:
+        gated = GATED_UP
+    for col in gated:
+        b, f = float(base[col]), float(fresh[col])
+        if f > b * (1 + TOLERANCE):
+            errors.append(f"{col}: {f:g} vs baseline {b:g} "
+                          f"(>{TOLERANCE:.0%} more launched tiles)")
+        else:
+            print(f"OK: {col} = {f:g} (baseline {b:g})")
+    for doc, tag in ((fresh_doc, "fresh"), (base_doc, "baseline")):
+        if doc.get("interpret"):
+            print(f"note: {tag} run is interpret-mode "
+                  f"(backend={doc.get('backend')}) — wall-clock columns "
+                  f"measure the Pallas emulation, not TPU perf")
+    for col in ANNOTATE:
+        if col in fresh:
+            extra = f" (baseline {base[col]:.3f})" if col in base else ""
+            print(f"   {col}: {fresh[col]:.3f}{extra}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="freshly written BENCH_kernels.json")
+    ap.add_argument("--baseline", default=str(BASELINE))
+    args = ap.parse_args(argv)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    errors = check(fresh, base)
+    for e in errors:
+        print(f"FAIL: {e}")
+    if not errors:
+        print("OK: sparse-grid columns within tolerance of the baseline")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

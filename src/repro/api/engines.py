@@ -45,7 +45,9 @@ register_engine(
     # engine's perf trajectory instead.
     benchmark=False,
     description="MeSP with the structured rules fused into Pallas TPU "
-                "kernels (interpret mode off-TPU)")(_grad_builder)
+                "kernels: sparse-grid flash attention (causal/window tiles "
+                "skipped at trace time), optional in-kernel RoPE "
+                "(--fuse-rope); interpret mode off-TPU")(_grad_builder)
 
 register_engine(
     "mebp", backend="plain", memsim="mebp", paper="§3.3",

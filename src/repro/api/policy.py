@@ -26,6 +26,11 @@ over by jitted step functions, never traced.  Fields:
   the scan body, the paper's §4.3 store-block-inputs-only schedule).
 * ``interpret``     — force the Pallas interpreter on/off (None = auto:
   interpret off-TPU).
+* ``fuse_rope``     — pallas backend only: rotate q/k inside the flash
+  kernels (cos/sin tables streamed per tile, rotated q/k never
+  materialized in HBM) instead of the separate jnp RoPE pass. Gradients
+  are identical ≤1e-5; architectures without RoPE (rwkv6, griffin,
+  whisper) are unaffected.
 """
 from __future__ import annotations
 
@@ -45,6 +50,7 @@ class ExecutionPolicy:
     flash_chunk: int = 1024
     remat: bool = True
     interpret: Optional[bool] = None
+    fuse_rope: bool = False
 
     def __post_init__(self):
         if self.backend not in BACKENDS:

@@ -45,6 +45,7 @@ class TrainSpec:
     flash_min_seq: int = 1024
     flash_chunk: int = 1024
     pallas_interpret: Optional[bool] = None   # None = auto (off-TPU only)
+    fuse_rope: bool = False                   # pallas: RoPE inside the flash kernels
     # --- sharding: not CLI-serializable (PartitionSpec objects); set
     # programmatically by the distributed launchers ------------------------
     act_spec: Any = dataclasses.field(default=None, metadata=_NO_CLI)
@@ -70,7 +71,8 @@ class TrainSpec:
         return ExecutionPolicy(
             backend=eng.backend or "plain", quantize=self.quantize,
             act_spec=self.act_spec, flash_min_seq=self.flash_min_seq,
-            flash_chunk=self.flash_chunk, interpret=self.pallas_interpret)
+            flash_chunk=self.flash_chunk, interpret=self.pallas_interpret,
+            fuse_rope=self.fuse_rope)
 
     # ------------------------------------------------------- CLI round trip
     def to_cli_args(self) -> list:
@@ -84,7 +86,7 @@ class TrainSpec:
             if val == f.default:
                 continue
             flag = "--" + f.name.replace("_", "-")
-            if f.name == "reduced":
+            if f.name in ("reduced", "fuse_rope"):
                 argv.append(flag)
             elif f.name == "pallas_interpret":
                 argv += [flag, {True: "on", False: "off", None: "auto"}[val]]
@@ -140,4 +142,7 @@ def build_arg_parser() -> argparse.ArgumentParser:
     ap.add_argument("--pallas-interpret", default="auto",
                     choices=["auto", "on", "off"],
                     help="force the Pallas interpreter (auto = off-TPU only)")
+    ap.add_argument("--fuse-rope", action="store_true",
+                    help="pallas backend: apply RoPE inside the flash "
+                         "kernels (q/k rotated in VMEM, no HBM round-trip)")
     return ap

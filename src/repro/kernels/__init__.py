@@ -12,6 +12,12 @@
                          a backward that recomputes probabilities from it
                          (paper §2's recompute-over-store principle). GQA is
                          grouped via kernel index maps — K/V never repeated.
+                         Grids are *sparse*: causal/window/padding dead
+                         tiles are dropped at trace time via scalar-prefetch
+                         schedules (``tiling.flash_schedule``); optional
+                         fused RoPE rotates q/k tiles in VMEM.
+* ``rope``             — cos/sin table helpers + the standalone fused RoPE
+                         kernel (backward = same kernel at −θ).
 * ``ops``              — the dispatch layer behind the ``pallas``
   ExecutionPolicy backend: per-op
                          structured-jnp fallback on unsupported shapes,
@@ -24,4 +30,5 @@ Each kernel has a pure-jnp oracle in ``ref.py`` and a jit'd wrapper in
 ``ops.py``; tests sweep shapes/dtypes in interpret mode against the oracles
 and against the structured custom_vjp rules.
 """
-from repro.kernels import autotune, lora_quant, ops, ref, tiling  # noqa: F401
+from repro.kernels import (autotune, lora_quant, ops, ref, rope,  # noqa: F401
+                           tiling)

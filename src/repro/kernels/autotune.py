@@ -9,10 +9,22 @@ Two layers:
 2. **Measured autotune** (:func:`autotune`) — optional: time a candidate
    sweep for an op instance and cache the winner, keyed by
    ``(op, dims, dtype, backend)``. The cache is consulted by
-   :func:`choose_blocks` before the heuristics, and can be persisted to a
-   JSON file (``save_cache``/``load_cache``; ``REPRO_AUTOTUNE_CACHE`` names a
-   file to load at import). Benchmarks run it explicitly; training never
-   blocks on measurement.
+   :func:`choose_blocks` before the heuristics, and persists to JSON
+   (``save_cache``/``load_cache``). Benchmarks run it explicitly; training
+   never blocks on measurement.
+
+Persisted caches, loaded lazily on first use (resolving the backend at
+import would force JAX runtime initialization as an import side effect) in
+priority order (later wins):
+
+1. the **checked-in per-backend-generation cache**
+   ``kernels/autotune_cache/<backend_generation()>.json`` (e.g. ``cpu.json``
+   for the interpret-mode CI runs, ``tpu-v5p.json`` measured once per chip
+   generation and committed);
+2. an explicit ``REPRO_AUTOTUNE_CACHE=<path>`` override.
+
+``benchmarks/kernels.py`` run with ``REPRO_AUTOTUNE=1`` re-measures and
+rewrites the current backend's checked-in file via :func:`save_cache`.
 """
 from __future__ import annotations
 
@@ -29,10 +41,28 @@ from repro.kernels.tiling import ceil_to
 # key -> {"bm": ..., ...}
 _CACHE: Dict[str, Dict[str, int]] = {}
 
+#: per-backend-generation measured caches checked into the repo
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "autotune_cache")
+
 
 def _key(op: str, dims: Dict[str, int], dtype) -> str:
     d = "/".join(f"{k}={v}" for k, v in sorted(dims.items()))
     return f"{op}|{d}|{jnp.dtype(dtype).name}|{jax.default_backend()}"
+
+
+def backend_generation() -> str:
+    """Cache-file name for the current accelerator generation: block-size
+    winners transfer within a generation (same MXU/VMEM geometry) but not
+    across, so e.g. ``tpu-v5p`` and ``tpu-v4`` get separate files; every
+    non-TPU backend runs the interpreter and shares one file per platform."""
+    if jax.default_backend() == "tpu":
+        kind = jax.devices()[0].device_kind       # e.g. "TPU v5p"
+        return kind.lower().replace(" ", "-")
+    return jax.default_backend()                  # "cpu" / "gpu"
+
+
+def builtin_cache_path() -> str:
+    return os.path.join(CACHE_DIR, backend_generation() + ".json")
 
 
 # ---------------------------------------------------------------------------
@@ -105,6 +135,7 @@ def _heuristic(op: str, dims: Dict[str, int], dtype) -> Dict[str, int]:
 
 def choose_blocks(op: str, dtype=jnp.float32, **dims: int) -> Dict[str, int]:
     """Measured-cache lookup, falling back to the heuristic table."""
+    _ensure_loaded()
     hit = _CACHE.get(_key(op, dims, dtype))
     if hit is not None:
         return dict(hit)
@@ -118,8 +149,7 @@ def choose_blocks(op: str, dtype=jnp.float32, **dims: int) -> Dict[str, int]:
 
 def _time_once(fn: Callable[[], object]) -> float:
     t0 = time.perf_counter()
-    out = fn()
-    jax.block_until_ready(out)
+    jax.block_until_ready(fn())
     return time.perf_counter() - t0
 
 
@@ -132,14 +162,21 @@ def autotune(op: str, run: Callable[[Dict[str, int]], object], *,
     ``run`` must execute the kernel with the given block sizes and return a
     JAX value (used for ``block_until_ready``). Candidates that fail to
     compile/execute (e.g. VMEM overflow on real TPUs) are skipped.
+
+    Timing discipline: the compile call is synced and never timed, and the
+    *first timed* iteration is discarded too (dispatch/transfer warm-up) —
+    otherwise a candidate can be crowned or buried on compile noise.
     """
+    _ensure_loaded()
     best, best_t = None, float("inf")
     for blocks in candidates:
         try:
-            _time_once(lambda: run(blocks))          # compile + warm
-            t = min(_time_once(lambda: run(blocks)) for _ in range(repeats))
+            jax.block_until_ready(run(blocks))       # compile — never timed
+            times = [_time_once(lambda: run(blocks))
+                     for _ in range(repeats + 1)]
         except Exception:
             continue
+        t = min(times[1:])                           # drop warm-up iteration
         if t < best_t:
             best, best_t = dict(blocks), t
     if best is None:
@@ -157,15 +194,41 @@ def load_cache(path: str) -> int:
     return len(data)
 
 
-def save_cache(path: str) -> None:
+def save_cache(path: Optional[str] = None) -> str:
+    """Persist the measured cache; default target is the checked-in
+    per-backend-generation file (``autotune_cache/<backend>.json``).
+
+    Only the *current* backend's entries are written (keys end in
+    ``|<backend>``): the merged in-memory cache may also hold entries
+    loaded from other generations' files or a ``REPRO_AUTOTUNE_CACHE``
+    override, and those must not leak into this backend's committed file.
+    """
+    path = path or builtin_cache_path()
+    suffix = f"|{jax.default_backend()}"
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
-        json.dump(_CACHE, f, indent=1, sort_keys=True)
+        json.dump({k: v for k, v in _CACHE.items() if k.endswith(suffix)},
+                  f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
 
 
-_env_cache = os.environ.get("REPRO_AUTOTUNE_CACHE")
-if _env_cache and os.path.exists(_env_cache):
-    try:
-        load_cache(_env_cache)
-    except Exception:
-        pass
+_LOADED = False
+
+
+def _ensure_loaded() -> None:
+    """First-use loads: checked-in per-backend cache first, then the
+    ``REPRO_AUTOTUNE_CACHE`` override (its entries win the merge). Lazy so
+    that importing the package never initializes the JAX runtime (the
+    backend name is part of the cache-file name)."""
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    for path in (builtin_cache_path(),
+                 os.environ.get("REPRO_AUTOTUNE_CACHE")):
+        if path and os.path.exists(path):
+            try:
+                load_cache(path)
+            except Exception:
+                pass

@@ -63,6 +63,31 @@ def _lora_fused_q_kernel(x_ref, q_ref, s_ref, a_ref, b_ref, o_ref,
                       scale * delta).astype(o_ref.dtype)
 
 
+@functools.lru_cache(maxsize=None)
+def _lora_fused_q_call(Mp: int, Kp: int, Np: int, r: int, dtype_name: str,
+                       scale: float, bm: int, bn: int, bk: int,
+                       interpret: bool):
+    n_k = Kp // bk
+    return pl.pallas_call(
+        functools.partial(_lora_fused_q_kernel, scale=scale, n_k=n_k),
+        grid=(Mp // bm, Np // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # x
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # q (int8)
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),    # scale row
+            pl.BlockSpec((bk, r), lambda i, j, k: (k, 0)),    # a
+            pl.BlockSpec((r, bn), lambda i, j, k: (0, j)),    # b
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.dtype(dtype_name)),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),                # W0 accumulator
+            pltpu.VMEM((bm, r), jnp.float32),                 # h tile (VMEM!)
+        ],
+        interpret=interpret,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "bm", "bn", "bk",
                                              "interpret"))
 def lora_fused_q(x, q, s, a, b, scale: float = 2.0, *, bm: int = 128,
@@ -80,27 +105,9 @@ def lora_fused_q(x, q, s, a, b, scale: float = 2.0, *, bm: int = 128,
     bp = pad_dim(b, bn, 1)
     Mp, Kp = xp.shape
     Np = qp.shape[1]
-    n_k = Kp // bk
-
-    grid = (Mp // bm, Np // bn, n_k)
-    out = pl.pallas_call(
-        functools.partial(_lora_fused_q_kernel, scale=scale, n_k=n_k),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # x
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # q (int8)
-            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),    # scale row
-            pl.BlockSpec((bk, r), lambda i, j, k: (k, 0)),    # a
-            pl.BlockSpec((r, bn), lambda i, j, k: (0, j)),    # b
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bm, bn), jnp.float32),                # W0 accumulator
-            pltpu.VMEM((bm, r), jnp.float32),                 # h tile (VMEM!)
-        ],
-        interpret=interpret,
-    )(xp, qp, sp, ap, bp)
+    out = _lora_fused_q_call(Mp, Kp, Np, r, jnp.dtype(x.dtype).name,
+                             float(scale), bm, bn, bk,
+                             interpret)(xp, qp, sp, ap, bp)
     return out[:M, :N]
 
 
@@ -125,6 +132,27 @@ def _lora_dx_q_kernel(g_ref, s_ref, qt_ref, dh_ref, at_ref, o_ref, acc_ref,
         o_ref[...] = (acc_ref[...] + lora_part).astype(o_ref.dtype)
 
 
+@functools.lru_cache(maxsize=None)
+def _lora_dx_q_call(Mp: int, Kp: int, Np: int, r: int, dtype_name: str,
+                    bm: int, bk: int, bn: int, interpret: bool):
+    n_n = Np // bn
+    return pl.pallas_call(
+        functools.partial(_lora_dx_q_kernel, n_n=n_n),
+        grid=(Mp // bm, Kp // bk, n_n),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, n: (i, n)),   # g
+            pl.BlockSpec((1, bn), lambda i, j, n: (0, n)),    # scale row
+            pl.BlockSpec((bn, bk), lambda i, j, n: (n, j)),   # qᵀ (int8)
+            pl.BlockSpec((bm, r), lambda i, j, n: (i, 0)),    # dh
+            pl.BlockSpec((r, bk), lambda i, j, n: (0, j)),    # aᵀ
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, n: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Kp), jnp.dtype(dtype_name)),
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+        interpret=interpret,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "bm", "bk", "bn",
                                              "interpret"))
 def lora_dx_q(g, q, s, a, b, scale: float = 2.0, *, bm: int = 128,
@@ -147,22 +175,6 @@ def lora_dx_q(g, q, s, a, b, scale: float = 2.0, *, bm: int = 128,
     Mp, Np = gp.shape
     Kp = qtp.shape[1]
     r = atp.shape[0]
-    n_n = Np // bn
-
-    grid = (Mp // bm, Kp // bk, n_n)
-    out = pl.pallas_call(
-        functools.partial(_lora_dx_q_kernel, n_n=n_n),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j, n: (i, n)),   # g
-            pl.BlockSpec((1, bn), lambda i, j, n: (0, n)),    # scale row
-            pl.BlockSpec((bn, bk), lambda i, j, n: (n, j)),   # qᵀ (int8)
-            pl.BlockSpec((bm, r), lambda i, j, n: (i, 0)),    # dh
-            pl.BlockSpec((r, bk), lambda i, j, n: (0, j)),    # aᵀ
-        ],
-        out_specs=pl.BlockSpec((bm, bk), lambda i, j, n: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Mp, Kp), g.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
-        interpret=interpret,
-    )(gp, sp, qtp, dhp, atp)
+    out = _lora_dx_q_call(Mp, Kp, Np, r, jnp.dtype(g.dtype).name, bm, bk,
+                          bn, interpret)(gp, sp, qtp, dhp, atp)
     return out[:M, :K]

@@ -33,6 +33,7 @@ from repro.kernels import lora_fused as _lf
 from repro.kernels import lora_quant as _lq
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import flash_attention as _fa
+from repro.kernels import rope as _rope
 
 # Below this many query rows the dense structured sdpa beats the kernel's
 # padding + grid overhead (and is easier to cross-check).
@@ -213,53 +214,62 @@ def rmsnorm(x, w, eps: float = 1e-6, *, policy=None, interpret=None):
 
 # ---------------------------------------------------------------------------
 # Flash attention: Pallas fwd saving per-row logsumexp + Pallas bwd that
-# recomputes probabilities tile-wise from it. GQA grouped via index maps.
+# recomputes probabilities tile-wise from it. GQA grouped via index maps;
+# causal/window grids are sparse (dead tiles never launched — see
+# kernels/flash_attention.py); optional fused RoPE rotates q/k in VMEM.
 # ---------------------------------------------------------------------------
 
 
-def _attn_blocks(Nq, Nk, D, dtype):
-    return autotune.choose_blocks("flash", dtype, Nq=Nq, Nk=Nk, D=D)
+def _attn_blocks(Nq, Nk, D, dtype, causal, window):
+    # causal/window key the measured cache: the sparse schedule (and so the
+    # best block shape) depends on the mask structure
+    return autotune.choose_blocks("flash", dtype, Nq=Nq, Nk=Nk, D=D,
+                                  causal=int(causal), window=window)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def flash_attention(q, k, v, causal: bool = True, window: int = 0,
-                    interpret: bool = False):
-    """q: [B,H,N,D]; k/v: [B,Hkv,Nk,D] -> [B,H,N,D]. Differentiable."""
-    out, _ = _flash_fwd_impl(q, k, v, causal, window, interpret)
+                    interpret: bool = False, rope=None):
+    """q: [B,H,N,D]; k/v: [B,Hkv,Nk,D] -> [B,H,N,D]. Differentiable.
+    ``rope=(cos, sin)`` ([N, D/2] f32) fuses the q/k rotation into the
+    kernels (tables are treated as constants — zero cotangent)."""
+    out, _ = _flash_fwd_impl(q, k, v, rope, causal, window, interpret)
     return out
 
 
-def _flash_fwd_impl(q, k, v, causal, window, interpret):
+def _flash_fwd_impl(q, k, v, rope, causal, window, interpret):
     B, H, Nq, D = q.shape
     Hkv, Nk = k.shape[1], k.shape[2]
-    blk = _attn_blocks(Nq, Nk, D, q.dtype)
+    blk = _attn_blocks(Nq, Nk, D, q.dtype, causal, window)
     out, lse = _fa.flash_attention_fwd(
         q.reshape(B * H, Nq, D), k.reshape(B * Hkv, Nk, D),
-        v.reshape(B * Hkv, Nk, D), causal=causal, window=window,
+        v.reshape(B * Hkv, Nk, D), rope, causal=causal, window=window,
         q_per_kv=H // Hkv, interpret=interpret, return_lse=True,
         bq=blk["bq"], bk=blk["bk"])
     return out.reshape(B, H, Nq, D), lse
 
 
-def _flash_vjp_fwd(q, k, v, causal, window, interpret):
-    out, lse = _flash_fwd_impl(q, k, v, causal, window, interpret)
+def _flash_vjp_fwd(q, k, v, causal, window, interpret, rope):
+    out, lse = _flash_fwd_impl(q, k, v, rope, causal, window, interpret)
     # MeSP residual contract: (q, k, v, out, lse) — probs never stored
-    return out, (q, k, v, out, lse)
+    return out, (q, k, v, rope, out, lse)
 
 
 def _flash_vjp_bwd(causal, window, interpret, res, g):
-    q, k, v, out, lse = res
+    q, k, v, rope, out, lse = res
     B, H, Nq, D = q.shape
     Hkv, Nk = k.shape[1], k.shape[2]
-    blk = _attn_blocks(Nq, Nk, D, q.dtype)
+    blk = _attn_blocks(Nq, Nk, D, q.dtype, causal, window)
     dq, dk, dv = _fa.flash_attention_bwd(
         q.reshape(B * H, Nq, D), k.reshape(B * Hkv, Nk, D),
         v.reshape(B * Hkv, Nk, D), out.reshape(B * H, Nq, D), lse,
-        g.reshape(B * H, Nq, D), causal=causal, window=window,
+        g.reshape(B * H, Nq, D), rope, causal=causal, window=window,
         q_per_kv=H // Hkv, interpret=interpret,
         bq=blk["bq"], bk=blk["bk"])
+    d_rope = None if rope is None else (jnp.zeros_like(rope[0]),
+                                        jnp.zeros_like(rope[1]))
     return (dq.reshape(B, H, Nq, D), dk.reshape(B, Hkv, Nk, D),
-            dv.reshape(B, Hkv, Nk, D))
+            dv.reshape(B, Hkv, Nk, D), d_rope)
 
 
 flash_attention.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
@@ -273,13 +283,18 @@ def attention_supported(q, k) -> bool:
 
 
 def sdpa(q, k, v, *, causal: bool = True, window: int = 0, policy=None,
-         interpret=None):
+         interpret=None, rope=None):
     """Dispatch: flash kernel attention, structured sdpa fallback for short
-    sequences / unsupported layouts."""
+    sequences / unsupported layouts. ``rope=(cos, sin)`` arrives *unapplied*
+    (layers skip the jnp rotation when fusing): the kernel path rotates q/k
+    tiles in VMEM; the fallback applies the same tables via jnp first."""
     if not attention_supported(q, k):
+        if rope is not None:
+            q = _rope.apply_rope_tables(q, *rope)
+            k = _rope.apply_rope_tables(k, *rope)
         return structured.sdpa(q, k, v, window, causal)
     return flash_attention(q, k, v, causal, window,
-                           _resolve_interpret(policy, interpret))
+                           _resolve_interpret(policy, interpret), rope)
 
 
 def flash_attention_kernel(q, k, v, *, causal: bool = True, window: int = 0,

@@ -9,6 +9,10 @@ are constructed so they contribute exactly nothing to the unpadded outputs
 """
 from __future__ import annotations
 
+import functools
+
+import numpy as np
+
 import jax.numpy as jnp
 
 # Block-size alignment for single-block (dim < block) cases. Kernel block
@@ -39,3 +43,141 @@ def pad_dim(x, mult: int, axis: int):
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# sparse flash-attention tile schedules
+#
+# The flash kernels iterate a *flat* grid over exactly the (q_block, k_block)
+# tiles that can contain unmasked entries; the mapping flat-step -> tile is a
+# trace-time-computed int32 schedule handed to the kernel via scalar prefetch
+# (the BlockSpec index maps read it to pick each step's HBM tile). Everything
+# here is static Python/numpy: causal/window/valid-length masks are known at
+# trace time, so dead tiles are never launched at all, and tiles whose every
+# (q, k) pair is valid are flagged *interior* so the kernel skips building
+# the positional mask for them.
+# ---------------------------------------------------------------------------
+
+
+def _tile_live(i: int, j: int, *, bq: int, bk: int, causal: bool,
+               window: int, nq: int, nk: int) -> bool:
+    """Can tile (i, j) contain any unmasked (q_pos, k_pos) pair?"""
+    q_lo = i * bq
+    k_lo = j * bk
+    if q_lo >= nq or k_lo >= nk:
+        return False                                  # fully padded tile
+    q_hi = min((i + 1) * bq, nq) - 1                  # last valid position
+    k_hi = min((j + 1) * bk, nk) - 1
+    if causal and q_hi < k_lo:
+        return False                                  # strictly above diag
+    if window > 0 and q_lo - k_hi >= window:
+        return False                                  # behind the window
+    return True
+
+
+def _tile_interior(i: int, j: int, *, bq: int, bk: int, causal: bool,
+                   window: int, nq: int, nk: int) -> bool:
+    """Is every (q_pos, k_pos) pair of the *full* tile valid (no mask)?"""
+    if (i + 1) * bq > nq or (j + 1) * bk > nk:
+        return False                                  # touches padding
+    q_lo, q_hi = i * bq, (i + 1) * bq - 1
+    k_lo, k_hi = j * bk, (j + 1) * bk - 1
+    if causal and q_lo < k_hi:
+        return False                                  # diagonal crosses tile
+    if window > 0 and q_hi - k_lo >= window:
+        return False                                  # window edge crosses
+    return True
+
+
+@functools.lru_cache(maxsize=None)
+def flash_schedule(n_q: int, n_k: int, bq: int, bk: int, causal: bool,
+                   window: int, nq: int, nk: int, sparse: bool = True):
+    """Row-major (q-outer) tile schedule for the flash fwd / bwd-dq grids.
+
+    Returns int32 numpy arrays ``(qi, kj, interior)`` of equal length T: step
+    t of the flat grid visits tile ``(qi[t], kj[t])``; ``interior[t]`` is 1
+    when the kernel may skip mask construction. Tiles of one q row are
+    contiguous and ascending in kj, so the kernel detects row start/end by
+    comparing ``qi`` at t±1. A q row block with valid rows but *no* live
+    tile (fully-masked rows, e.g. causal+window with nq > nk+window) gets
+    one boundary dummy tile so its output block is still initialized and
+    written (the kernel zeroes never-attended rows). ``sparse=False`` emits
+    the dense row-major sweep — the reference grid the tests and benchmarks
+    compare against.
+    """
+    qi, kj, interior = [], [], []
+    for i in range(n_q):
+        if i * bq >= nq:
+            continue                                  # fully padded q rows
+        if sparse:
+            cols = [j for j in range(n_k)
+                    if _tile_live(i, j, bq=bq, bk=bk, causal=causal,
+                                  window=window, nq=nq, nk=nk)]
+        else:
+            cols = list(range(n_k))
+        if not cols:
+            cols = [0]                                # dummy: init + write
+        for j in cols:
+            qi.append(i)
+            kj.append(j)
+            interior.append(int(sparse and _tile_interior(
+                i, j, bq=bq, bk=bk, causal=causal, window=window,
+                nq=nq, nk=nk)))
+    return (np.asarray(qi, np.int32), np.asarray(kj, np.int32),
+            np.asarray(interior, np.int32))
+
+
+@functools.lru_cache(maxsize=None)
+def flash_schedule_kv(n_q: int, n_k: int, bq: int, bk: int, causal: bool,
+                      window: int, nq: int, nk: int, G: int,
+                      sparse: bool = True):
+    """Transposed (k-outer) schedule for the bwd-dkv grid.
+
+    Returns ``(kj, g, qi, interior)``: one K/V block stays resident while
+    all ``G`` GQA group members' live q rows stream past it. Entries of one
+    k column are contiguous (g-major, then ascending qi) so the kernel
+    detects column start/end by comparing ``kj`` at t±1. A k column block
+    with valid keys but no live q tile (e.g. causal with nk > nq) gets one
+    dummy tile so dk/dv are written as zeros there.
+    """
+    kj, g, qi, interior = [], [], [], []
+    for j in range(n_k):
+        if j * bk >= nk:
+            continue
+        rows = [i for i in range(n_q)
+                if _tile_live(i, j, bq=bq, bk=bk, causal=causal,
+                              window=window, nq=nq, nk=nk)] if sparse \
+            else list(range(n_q))
+        entries = [(gg, i) for gg in range(G) for i in rows] or [(0, 0)]
+        for gg, i in entries:
+            kj.append(j)
+            g.append(gg)
+            qi.append(i)
+            interior.append(int(sparse and rows and _tile_interior(
+                i, j, bq=bq, bk=bk, causal=causal, window=window,
+                nq=nq, nk=nk)))
+    return (np.asarray(kj, np.int32), np.asarray(g, np.int32),
+            np.asarray(qi, np.int32), np.asarray(interior, np.int32))
+
+
+def flash_schedule_stats(Nq: int, Nk: int, bq: int, bk: int, causal: bool,
+                         window: int) -> dict:
+    """Live/interior/boundary tile counts for one head's (fwd or bwd-dq)
+    grid — the arithmetic behind the benchmark columns. Block sizes are
+    clamped the same way the kernel wrappers clamp them."""
+    bq, bk = block_for(Nq, bq), block_for(Nk, bk)
+    n_q, n_k = ceil_to(Nq, bq) // bq, ceil_to(Nk, bk) // bk
+    qi, kj, interior = flash_schedule(n_q, n_k, bq, bk, causal, window,
+                                      Nq, Nk, True)
+    live = int(len(qi))
+    inter = int(interior.sum())
+    return {
+        "bq": bq, "bk": bk,
+        "dense_tiles": n_q * n_k,
+        "live_tiles": live,
+        "interior_tiles": inter,
+        "boundary_tiles": live - inter,
+        "grid_fraction": live / float(n_q * n_k),
+        # MXU work actually launched: 2 matmuls of 2·bq·bk·D flops each per
+        # tile -> report tile count; callers scale by per-tile flops.
+    }

@@ -23,6 +23,7 @@ from repro.core import structured
 from repro.core.flash import flash_attention
 from repro.core.quant import maybe_dequant
 from repro.kernels import ops as kops
+from repro.kernels import rope as krope
 
 Array = jax.Array
 
@@ -207,11 +208,20 @@ def attention(p, x, cfg: ArchConfig, *, window: int = 0, causal: bool = True,
     k = apply_linear(p["k"], src, cfg, policy=policy).reshape(B, Nk, cfg.n_kv_heads, hd)
     v = apply_linear(p["v"], src, cfg, policy=policy).reshape(B, Nk, cfg.n_kv_heads, hd)
 
+    rope_tabs = None
     if use_rope:
         qpos = jnp.arange(N) + pos
         kpos = jnp.arange(Nk) + (pos if kv_x is None else 0)
-        q = rope(q, qpos, cfg.rope_theta)
-        k = rope(k, kpos, cfg.rope_theta)
+        fuse = (policy.backend == "pallas" and policy.fuse_rope
+                and cache is None and kv_x is None and hd % 2 == 0)
+        if fuse:
+            # rotation deferred into the flash kernels: the [N, D/2] cos/sin
+            # tables stream per tile and q/k are rotated in VMEM — the
+            # rotated copies never round-trip through HBM (kernels/rope.py)
+            rope_tabs = krope.rope_tables(qpos, cfg.rope_theta, hd)
+        else:
+            q = rope(q, qpos, cfg.rope_theta)
+            k = rope(k, kpos, cfg.rope_theta)
 
     q = _head_constrain(q.transpose(0, 2, 1, 3), shard)  # [B,H,N,D]
     k = _head_constrain(k.transpose(0, 2, 1, 3), shard)
@@ -240,8 +250,10 @@ def attention(p, x, cfg: ArchConfig, *, window: int = 0, causal: bool = True,
         out = structured._sdpa_ref(q, k, v, window, causal, 0, None)
     elif policy.backend == "pallas":
         # kernel flash attention (fwd + lse-driven bwd); falls back to the
-        # structured sdpa for short sequences / unsupported layouts
-        out = kops.sdpa(q, k, v, causal=causal, window=window, policy=policy)
+        # structured sdpa for short sequences / unsupported layouts (the
+        # fallback applies any deferred rope tables via jnp first)
+        out = kops.sdpa(q, k, v, causal=causal, window=window, policy=policy,
+                        rope=rope_tabs)
     elif N >= policy.flash_min_seq:
         out = flash_attention(q, k, v, window, causal,
                               policy.flash_chunk, policy.flash_chunk)

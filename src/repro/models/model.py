@@ -12,9 +12,11 @@ Layout conventions
 * ``policy`` (:class:`repro.api.policy.ExecutionPolicy`) selects the
   backward regime (``policy.backend``: "structured" = MeSP hand-derived
   custom_vjp rules, "pallas" = MeSP via the fused TPU kernels in
-  ``repro.kernels``, "plain" = MeBP framework autodiff, "store_h" = paper
-  Table 5 ablation), the activation sharding constraint
-  (``policy.act_spec``) and the remat schedule (``policy.remat``).
+  ``repro.kernels`` — sparse-grid flash attention, optionally with RoPE
+  applied inside the kernels via ``policy.fuse_rope``), the activation
+  sharding constraint (``policy.act_spec``) and the remat schedule
+  (``policy.remat``). "plain" = MeBP framework autodiff, "store_h" =
+  paper Table 5 ablation.
 """
 from __future__ import annotations
 

@@ -1,4 +1,5 @@
-"""Pure-JAX flash attention (core/flash.py) ≡ dense structured sdpa."""
+"""Pure-JAX flash attention (core/flash.py) ≡ dense structured sdpa, and
+the Pallas kernels' sparse tile grids ≡ the dense-grid reference."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,6 +7,8 @@ import pytest
 
 from repro.core import structured
 from repro.core.flash import flash_attention
+from repro.kernels import flash_attention as fa
+from repro.kernels.tiling import flash_schedule_stats
 
 
 def _rand(shape, seed):
@@ -49,3 +52,98 @@ def test_flash_long_window_linear_work():
     # last query (position N-1) sees only keys in [N-W, N): earlier key grads 0
     np.testing.assert_allclose(g[:, :, :N - W], 0.0, atol=1e-7)
     assert float(jnp.max(jnp.abs(g[:, :, N - W:]))) > 0
+
+
+# ---------------------------------------------------------------------------
+# sparse tile grids (Pallas kernels, interpret mode): the flat live-tile
+# schedule must be bit-equivalent to the dense-grid sweep of the same
+# kernels on every mask shape — fwd, lse and all three gradients.
+# ---------------------------------------------------------------------------
+
+_I = dict(bq=128, bk=128, interpret=True)
+
+
+def _kernel_io(nq, nk, gqa, seed=0):
+    BHkv, D = 2, 32
+    q = _rand((BHkv * gqa, nq, D), seed)
+    k = _rand((BHkv, nk, D), seed + 1)
+    v = _rand((BHkv, nk, D), seed + 2)
+    g = _rand((BHkv * gqa, nq, D), seed + 3)
+    return q, k, v, g
+
+
+@pytest.mark.parametrize("nq,nk,causal,window,gqa", [
+    (300, 300, True, 0, 2),      # causal, non-aligned, GQA
+    (384, 384, True, 130, 1),    # sliding window crossing tile edges
+    (260, 260, False, 0, 2),     # non-causal (all tiles live)
+    (200, 200, True, 64, 4),     # window < block, wide GQA group
+    (300, 260, True, 0, 2),      # Nq != Nk, both padded
+])
+def test_sparse_grid_matches_dense_grid(nq, nk, causal, window, gqa):
+    q, k, v, g = _kernel_io(nq, nk, gqa)
+    kw = dict(causal=causal, window=window, q_per_kv=gqa, **_I)
+    o_s, l_s = fa.flash_attention_fwd(q, k, v, return_lse=True, sparse=True,
+                                      **kw)
+    o_d, l_d = fa.flash_attention_fwd(q, k, v, return_lse=True, sparse=False,
+                                      **kw)
+    np.testing.assert_allclose(o_s, o_d, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(l_s, l_d, rtol=2e-5, atol=2e-5)
+    d_s = fa.flash_attention_bwd(q, k, v, o_s, l_s, g, sparse=True, **kw)
+    d_d = fa.flash_attention_bwd(q, k, v, o_d, l_d, g, sparse=False, **kw)
+    for u, w in zip(d_s, d_d):
+        np.testing.assert_allclose(u, w, rtol=3e-5, atol=3e-5)
+
+
+def test_sparse_grid_matches_structured_reference():
+    """Sparse kernel grads == the dense jnp reference (structured.sdpa) on a
+    non-aligned GQA shape — the end-to-end oracle, not just grid-vs-grid."""
+    B, H, Hkv, N, D = 2, 4, 2, 200, 32
+    q = _rand((B, H, N, D), 0)
+    k, v = _rand((B, Hkv, N, D), 1), _rand((B, Hkv, N, D), 2)
+    from repro.kernels import ops
+    for causal, window in [(True, 0), (True, 96)]:
+        f1 = lambda q, k, v: jnp.sum(jnp.sin(
+            ops.flash_attention(q, k, v, causal, window, True)))
+        f2 = lambda q, k, v: jnp.sum(jnp.sin(
+            structured.sdpa(q, k, v, window, causal)))
+        g1 = jax.grad(f1, (0, 1, 2))(q, k, v)
+        g2 = jax.grad(f2, (0, 1, 2))(q, k, v)
+        for u, w in zip(g1, g2):
+            np.testing.assert_allclose(u, w, rtol=3e-5, atol=3e-5)
+
+
+def test_sparse_grid_fully_masked_rows():
+    """causal+window with Nq > Nk+window leaves whole q rows with no live
+    tile: both grids must produce exactly 0 output and 0 gradients there
+    (the dense jnp softmax NaNs on such rows — the kernels define them)."""
+    nq, nk, W = 384, 128, 64
+    q, k, v, g = _kernel_io(nq, nk, 1)
+    kw = dict(causal=True, window=W, q_per_kv=1, **_I)
+    o_s, l_s = fa.flash_attention_fwd(q, k, v, return_lse=True, sparse=True,
+                                      **kw)
+    o_d, l_d = fa.flash_attention_fwd(q, k, v, return_lse=True, sparse=False,
+                                      **kw)
+    np.testing.assert_allclose(o_s, o_d, rtol=2e-5, atol=2e-5)
+    dead = nk + W  # rows >= nk + W attend to nothing
+    assert float(jnp.max(jnp.abs(o_s[:, dead:]))) == 0.0
+    d_s = fa.flash_attention_bwd(q, k, v, o_s, l_s, g, sparse=True, **kw)
+    d_d = fa.flash_attention_bwd(q, k, v, o_d, l_d, g, sparse=False, **kw)
+    for u, w in zip(d_s, d_d):
+        np.testing.assert_allclose(u, w, rtol=3e-5, atol=3e-5)
+    assert float(jnp.max(jnp.abs(d_s[0][:, dead:]))) == 0.0
+
+
+def test_sparse_grid_live_tile_arithmetic():
+    """Long causal sequences launch ~(n+1)/2n of the dense grid (+boundary
+    diagonal); sliding windows launch O(window/N)."""
+    st = flash_schedule_stats(2048, 2048, 128, 128, True, 0)
+    n = st["dense_tiles"] ** 0.5          # 16 row blocks
+    assert st["live_tiles"] == int(n * (n + 1) / 2)
+    assert st["grid_fraction"] <= 0.5 + 1 / n + 1e-9
+    assert st["boundary_tiles"] == int(n)  # the diagonal, everything else
+    #                                        interior -> no mask evaluated
+    stw = flash_schedule_stats(2048, 2048, 128, 128, True, 256)
+    assert stw["grid_fraction"] <= 3 * 256 / 2048
+    # non-causal, unpadded: every tile live, only edge tiles boundary
+    stn = flash_schedule_stats(1024, 1024, 128, 128, False, 0)
+    assert stn["grid_fraction"] == 1.0 and stn["boundary_tiles"] == 0

@@ -104,6 +104,112 @@ def test_pallas_grads_match_structured_quantized():
     assert _rel(g_p, g_s) <= 1e-5
 
 
+def test_fused_rope_grads_match_structured(params):
+    """``fuse_rope=True`` moves the q/k rotation inside the flash kernels
+    (cos/sin tables streamed per tile, dq/dk counter-rotated): gradients
+    must stay ≤1e-5 of the structured path's jnp RoPE on the same
+    non-tile-aligned shapes."""
+    from repro.api import ExecutionPolicy
+    batch = _batch()
+    l_s, g_s = mesp.value_and_grad(params, CFG, batch, mode="structured")
+    l_f, g_f = mesp.value_and_grad(
+        params, CFG, batch,
+        policy=ExecutionPolicy(backend="pallas", fuse_rope=True))
+    np.testing.assert_allclose(float(l_f), float(l_s), rtol=1e-6)
+    assert _rel(g_f, g_s) <= 1e-5
+
+
+def test_fused_rope_matches_unfused_pallas(params):
+    """fuse_rope only changes *where* the rotation happens, not the math:
+    pallas-with-fused-rope ≡ pallas-with-jnp-rope bit-closely."""
+    from repro.api import ExecutionPolicy
+    batch = _batch()
+    _, g_p = mesp.value_and_grad(
+        params, CFG, batch, policy=ExecutionPolicy(backend="pallas"))
+    _, g_f = mesp.value_and_grad(
+        params, CFG, batch,
+        policy=ExecutionPolicy(backend="pallas", fuse_rope=True))
+    assert _rel(g_f, g_p) <= 1e-5
+
+
+def test_rope_kernel_matches_jnp_rope():
+    """Standalone fused RoPE kernel (kernels/rope.py) ≡ models/layers.rope,
+    forward and gradient, on a non-aligned length."""
+    from repro.kernels.rope import rope_apply, rope_tables
+    from repro.models.layers import rope as jnp_rope
+    B, N, H, D = 2, 200, 3, 32
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, N, H, D)) * 0.5
+    pos = jnp.arange(N)
+    cos, sin = rope_tables(pos, 10000.0, D)
+    y_k = rope_apply(x, cos, sin, True)
+    y_j = jnp_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(y_k, y_j, rtol=1e-6, atol=1e-6)
+    g_k = jax.grad(lambda x: jnp.sum(jnp.sin(rope_apply(x, cos, sin,
+                                                        True))))(x)
+    g_j = jax.grad(lambda x: jnp.sum(jnp.sin(jnp_rope(x, pos,
+                                                      10000.0))))(x)
+    np.testing.assert_allclose(g_k, g_j, rtol=1e-5, atol=1e-5)
+
+
+def test_autotune_cache_roundtrip(tmp_path, monkeypatch):
+    """A persisted cache named by REPRO_AUTOTUNE_CACHE is loaded on first
+    use and consulted by choose_blocks before the heuristics."""
+    import importlib
+    import json
+    from repro.kernels import autotune
+
+    key = (f"flash|D=32/Nk=777/Nq=777/causal=1/window=0|float32|"
+           f"{jax.default_backend()}")
+    path = tmp_path / "measured.json"
+    path.write_text(json.dumps({key: {"bq": 256, "bk": 128}}))
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    importlib.reload(autotune)
+    try:
+        blk = autotune.choose_blocks("flash", jnp.float32, Nq=777, Nk=777,
+                                     D=32, causal=1, window=0)
+        assert blk == {"bq": 256, "bk": 128}
+        # unrelated shapes still hit the heuristic table
+        assert autotune.choose_blocks("flash", jnp.float32, Nq=128, Nk=128,
+                                      D=32, causal=1, window=0)
+    finally:
+        monkeypatch.delenv("REPRO_AUTOTUNE_CACHE")
+        importlib.reload(autotune)
+
+
+def test_builtin_backend_cache_checked_in():
+    """The per-backend-generation cache shipped in the repo loads on first
+    use (CI runs on cpu; TPU generations get their own committed file).
+    Loading is lazy so importing the package never initializes JAX."""
+    import os
+    from repro.kernels import autotune
+    if not os.path.exists(autotune.builtin_cache_path()):
+        pytest.skip(f"no checked-in cache for {autotune.backend_generation()}")
+    autotune.choose_blocks("rmsnorm", jnp.float32, M=128, d=128)  # first use
+    assert any(k.endswith(f"|{jax.default_backend()}")
+               for k in autotune._CACHE)
+
+
+def test_fused_rope_asymmetric_blocks():
+    """bq != bk (a legal measured-cache outcome): the rope tables are read
+    through both (bq, ·) and (bk, ·) blocks and must stay in bounds."""
+    from repro.kernels import flash_attention as fa
+    from repro.kernels.rope import apply_rope_tables, rope_tables
+    N, D = 300, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, N, D)) * 0.5
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, N, D)) * 0.5
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, N, D)) * 0.5
+    cos, sin = rope_tables(jnp.arange(N), 10000.0, D)
+    for bq, bk in ((128, 256), (256, 128)):
+        kw = dict(causal=True, window=0, bq=bq, bk=bk, interpret=True)
+        o_f, l_f = fa.flash_attention_fwd(q, k, v, (cos, sin),
+                                          return_lse=True, **kw)
+        o_r = fa.flash_attention_fwd(apply_rope_tables(q, cos, sin),
+                                     apply_rope_tables(k, cos, sin), v, **kw)
+        np.testing.assert_allclose(o_f, o_r, rtol=2e-5, atol=2e-5)
+        g = jax.random.normal(jax.random.PRNGKey(3), (2, N, D)) * 0.5
+        fa.flash_attention_bwd(q, k, v, o_f, l_f, g, (cos, sin), **kw)
+
+
 def test_dispatch_falls_back_on_unsupported():
     """MoE-style batched [E,·,·] weights take the structured path (and still
     deliver correct gradients through the dispatcher)."""
