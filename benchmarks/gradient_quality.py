@@ -1,0 +1,126 @@
+"""Gradient-quality benchmark: every ZO engine vs the exact MeSP gradient.
+
+Reproduces the paper's §5.6 diagnostic (single-probe MeZO cosine ≈ 0.001 —
+essentially uncorrelated with the true gradient) and quantifies how much
+each structured ZO variant closes the gap, over a real training trajectory
+(``repro.zo.gradquality.probe_over_steps``). The engine sweep is generated
+from the registry (``backend=None`` + a ``value_and_grad`` hook), so a
+newly registered ZO engine joins with zero edits here.
+
+    PYTHONPATH=src python -m benchmarks.gradient_quality            # full
+    PYTHONPATH=src python -m benchmarks.gradient_quality --smoke    # CI
+
+Writes ``BENCH_gradient_quality.json`` (committed baseline under
+``benchmarks/results/``; ``scripts/check_bench_regression.py --gradquality``
+annotates drift against it) and, for full runs, a ``gradquality`` section in
+``benchmarks/results/paper_tables.md``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import platform
+import sys
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+BASELINE = os.path.join(RESULTS_DIR, "BENCH_gradient_quality.json")
+
+#: full-run measurement setting (the committed baseline): 12 steps × 4
+#: probes = 48 scored estimates per engine (sem ≈ 0.0004 — enough to
+#: separate the structured variants from vanilla mezo's ≈0.005)
+FULL = dict(n_layers=6, seq=48, batch=2, steps=12, warmup=10, probes=4)
+#: CI smoke setting — same machinery, minutes not tens of minutes
+SMOKE = dict(n_layers=3, seq=32, batch=2, steps=3, warmup=6, probes=2)
+
+
+def run(smoke: bool = False, arch: str = "qwen2.5-0.5b",
+        seed: int = 0) -> dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.zo import gradquality
+
+    setting = SMOKE if smoke else FULL
+    cfg = dataclasses.replace(get_config(arch).reduced(),
+                              n_layers=setting["n_layers"])
+    engines = gradquality.zo_engine_names()
+    t0 = time.monotonic()
+    results = gradquality.probe_over_steps(
+        engines, cfg, steps=setting["steps"], warmup=setting["warmup"],
+        seq=setting["seq"], batch=setting["batch"],
+        probes=setting["probes"], seed=seed)
+    return {
+        "benchmark": "gradient_quality",
+        "arch": arch, "reduced": True, "seed": seed,
+        "reference": "mesp",
+        "setting": dict(setting, smoke=smoke),
+        "backend": jax.default_backend(),
+        "machine": platform.machine(),
+        "elapsed_s": round(time.monotonic() - t0, 1),
+        "engines": results,
+    }
+
+
+def render_markdown(doc: dict) -> str:
+    s = doc["setting"]
+    lines = [
+        "## Gradient quality — ZO engines vs exact MeSP gradient "
+        "(paper §5.6 / Table 3)",
+        f"Reduced {doc['arch']} family, {s['n_layers']} layers, "
+        f"seq {s['seq']}, batch {s['batch']}; mean over {s['steps']} "
+        f"training steps × {s['probes']} probes after {s['warmup']} "
+        "exact-gradient warmup steps. "
+        "Single-probe SPSA cosine is near zero for vanilla `mezo` (the "
+        "paper's ≈0.001 finding — why MeZO converges slowly); the "
+        "structured samplers close part of the gap.",
+        "",
+        "| engine | mean cosine | ×`mezo` | sign agree | rel. error |",
+        "|---|---|---|---|---|",
+    ]
+    base = doc["engines"].get("mezo", {}).get("cosine_mean")
+    for name, r in doc["engines"].items():
+        # the ratio column only makes sense against a positive mezo mean
+        # (near-zero/negative baselines happen — SPSA cosine is noisy)
+        ratio = (f"{r['cosine_mean'] / base:.2f}×"
+                 if base is not None and base > 0 else "—")
+        lines.append(f"| `{name}` | {r['cosine_mean']:+.4f} | "
+                     f"{ratio} | {r['sign_agree_mean']:.1%} | "
+                     f"{r['rel_error_mean']:.1f} |")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer layers/steps), no report merge")
+    ap.add_argument("--arch", default="qwen2.5-0.5b")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help=f"output JSON path (default: {BASELINE})")
+    args = ap.parse_args(argv)
+
+    doc = run(smoke=args.smoke, arch=args.arch, seed=args.seed)
+    out = args.out or BASELINE
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+
+    for name, r in doc["engines"].items():
+        print(f"gradquality/{name}/cosine_mean,{r['cosine_mean']:.4f},"
+              f"sign={r['sign_agree_mean']:.3f} rel={r['rel_error_mean']:.1f}")
+    print(f"# wrote {out} ({doc['elapsed_s']}s)")
+
+    if not args.smoke:
+        from benchmarks.run import _merge_report
+        _merge_report(os.path.join(RESULTS_DIR, "paper_tables.md"),
+                      {"gradquality": render_markdown(doc)})
+        print(f"# report: {os.path.join(RESULTS_DIR, 'paper_tables.md')}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

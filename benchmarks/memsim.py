@@ -20,6 +20,11 @@ semantics the paper describes:
 * **Store h** — MeSP + h=[B,N,r] stored for all 7·L LoRA layers (Table 5).
 * **MeZO**  — inference working set + fp32 bookkeeping for the perturbed
   LoRA parameters (scales with rank — the paper's Table 4 observation).
+  All ZO engines retain no activations, so the structured variants
+  (``repro.zo``) resolve onto this model too — except:
+* **MeZO sparse** — MeZO + the top-ρ |w| mask bookkeeping accounted
+  explicitly: one byte per LoRA parameter while the probe's mask is alive
+  (the mask is recomputed from |w| per probe, never persisted).
 
 All terms are computed from tensor shapes (bf16 activations, fp32 softmax
 statistics, 4-bit frozen weights with a bf16 dequant workspace). No
@@ -141,7 +146,7 @@ def _mesp_stored_subset(cfg: ArchConfig, B: int, N: int) -> float:
 
 #: retention models implemented below; engine names resolve onto one of
 #: these via the registry's ``memsim`` hook (see ``_retention_model``)
-RETENTION_MODELS = ("mebp", "mesp", "store_h", "mezo")
+RETENTION_MODELS = ("mebp", "mesp", "store_h", "mezo", "mezo_sparse")
 
 
 def _retention_model(method: str) -> str:
@@ -189,11 +194,16 @@ def simulate(arch: str, method: str, seq: int, batch: int = 1,
         acts = (L * out + _mesp_stored_subset(cfg, B, N) + blk + head
                 + L * 7 * B * N * rank * BF16)
         lora_mb += _lora_params(cfg, rank) * F32 / 2**20 / L
-    elif method == "mezo":
+    elif method in ("mezo", "mezo_sparse"):
         # inference working set (one block transient + head) + fp32 z/update
         # bookkeeping over the perturbed LoRA params (×3: +z, −z, update)
         acts = blk + out + head
         lora_mb += 3 * _lora_params(cfg, rank) * F32 / 2**20
+        if method == "mezo_sparse":
+            # top-ρ |w| mask: boolean, one byte per LoRA param while a
+            # probe is live (the f32 |w| quantile scratch is per-leaf
+            # transient inside the probe working set, not retained)
+            lora_mb += _lora_params(cfg, rank) * 1 / 2**20
     else:
         raise ValueError(method)
 

@@ -12,8 +12,17 @@ under the Pallas interpreter (``"interpret": true`` in the JSON), where
 timing measures the emulation, not the hardware. Those columns are printed
 as annotations only; the committed baseline records which mode produced it.
 
+``--gradquality FRESH.json`` additionally annotates cosine-similarity drift
+of a fresh ``benchmarks/gradient_quality.py`` run against the committed
+``BENCH_gradient_quality.json`` baseline. Annotation-only, never gated:
+per-run cosine is a noisy statistic (SPSA probes), and the CI smoke setting
+deliberately differs from the committed full-run setting — the printout
+flags both.
+
     PYTHONPATH=src python -m benchmarks.kernels --steps 2 --out /tmp/f.json
     PYTHONPATH=src python scripts/check_bench_regression.py /tmp/f.json
+    PYTHONPATH=src python scripts/check_bench_regression.py \\
+        --gradquality /tmp/BENCH_gradient_quality_fresh.json
 """
 from __future__ import annotations
 
@@ -24,6 +33,8 @@ from pathlib import Path
 
 BASELINE = (Path(__file__).resolve().parent.parent / "benchmarks" /
             "results" / "BENCH_kernels.json")
+GQ_BASELINE = (Path(__file__).resolve().parent.parent / "benchmarks" /
+               "results" / "BENCH_gradient_quality.json")
 
 #: fractional worsening allowed before failing (a schedule is deterministic,
 #: so any change at all is suspicious — 10% leaves room for deliberate
@@ -74,20 +85,66 @@ def check(fresh_doc: dict, base_doc: dict) -> list[str]:
     return errors
 
 
+def annotate_gradquality(fresh_doc: dict, base_doc: dict) -> None:
+    """Print cosine-similarity drift per ZO engine vs the committed
+    gradient-quality baseline. Never fails: per-run cosine is noisy and the
+    smoke setting differs from the committed one by design."""
+    fs, bs = fresh_doc.get("setting", {}), base_doc.get("setting", {})
+    if fs != bs:
+        print(f"note: gradquality settings differ (fresh {fs} vs baseline "
+              f"{bs}) — drift figures are indicative only")
+    fresh_e = fresh_doc.get("engines", {})
+    base_e = base_doc.get("engines", {})
+    for name in fresh_e:
+        f = fresh_e[name].get("cosine_mean")
+        b = base_e.get(name, {}).get("cosine_mean")
+        if f is None:
+            print(f"   gradquality {name}: no cosine_mean in fresh run "
+                  f"(partial run / schema mismatch?)")
+        elif b is None:
+            print(f"   gradquality {name}: cosine {f:+.4f} "
+                  f"(no baseline entry — newly registered engine?)")
+        else:
+            print(f"   gradquality {name}: cosine {f:+.4f} "
+                  f"(baseline {b:+.4f}, drift {f - b:+.4f})")
+    for name in sorted(set(base_e) - set(fresh_e)):
+        print(f"   gradquality {name}: in baseline but missing from fresh "
+              f"run — engine unregistered?")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("fresh", help="freshly written BENCH_kernels.json")
+    ap.add_argument("fresh", nargs="?", default=None,
+                    help="freshly written BENCH_kernels.json")
     ap.add_argument("--baseline", default=str(BASELINE))
+    ap.add_argument("--gradquality", default=None, metavar="FRESH_JSON",
+                    help="annotate a fresh BENCH_gradient_quality.json "
+                         "against the committed baseline (never gated)")
+    ap.add_argument("--gq-baseline", default=str(GQ_BASELINE))
     args = ap.parse_args(argv)
-    with open(args.fresh) as f:
-        fresh = json.load(f)
-    with open(args.baseline) as f:
-        base = json.load(f)
-    errors = check(fresh, base)
-    for e in errors:
-        print(f"FAIL: {e}")
-    if not errors:
-        print("OK: sparse-grid columns within tolerance of the baseline")
+    if args.fresh is None and args.gradquality is None:
+        ap.error("nothing to do: pass a fresh BENCH_kernels.json and/or "
+                 "--gradquality")
+
+    errors = []
+    if args.fresh is not None:
+        with open(args.fresh) as f:
+            fresh = json.load(f)
+        with open(args.baseline) as f:
+            base = json.load(f)
+        errors = check(fresh, base)
+        for e in errors:
+            print(f"FAIL: {e}")
+        if not errors:
+            print("OK: sparse-grid columns within tolerance of the baseline")
+
+    if args.gradquality is not None:
+        with open(args.gradquality) as f:
+            gq_fresh = json.load(f)
+        with open(args.gq_baseline) as f:
+            gq_base = json.load(f)
+        annotate_gradquality(gq_fresh, gq_base)
+
     return 1 if errors else 0
 
 

@@ -4,11 +4,11 @@ Importing this module (done lazily by the registry) registers the paper's
 engines: ``mesp`` (§4, production scan form), ``mesp_seq`` (§4.3 sequential
 loop with immediate optimizer updates), ``mesp_pallas`` (§4 fused into
 Pallas TPU kernels), ``mebp`` (§3.3 autodiff baseline), ``store_h``
-(Table 5 ablation) and ``mezo`` (§3.2 zeroth-order baseline).
+(Table 5 ablation), and — via ``repro.zo.engines`` — the zeroth-order
+family: ``mezo`` (§3.2 baseline) plus the structured-sampler variants
+``mezo_sparse`` / ``mezo_lowrank`` / ``mezo_block`` / ``mezo_avg4``.
 """
 from __future__ import annotations
-
-import jax
 
 from repro.api.registry import register_engine
 
@@ -88,27 +88,6 @@ def _mesp_seq_builder(spec, cfg, opt, policy):
     return step
 
 
-def _mezo_vag(params, cfg, batch, *, policy, key=None):
-    from repro.core import mezo
-    key = key if key is not None else jax.random.PRNGKey(0)
-    return mezo.spsa_grad(params, cfg, batch, key)
-
-
-@register_engine(
-    "mezo", backend=None, memsim="mezo", paper="§3.2",
-    value_and_grad=_mezo_vag,
-    description="MeZO baseline: SPSA zeroth-order estimate from two plain "
-                "forward passes")
-def _mezo_builder(spec, cfg, opt, policy):
-    from repro.core import mezo
-
-    # perturbation stream derives from the spec's seed (folded per step)
-    base_key = jax.random.PRNGKey(spec.seed)
-
-    def step(params, opt_state, batch):
-        key = jax.random.fold_in(base_key, opt_state["step"])
-        loss, grads = mezo.spsa_grad(params, cfg, batch, key)
-        params, opt_state = opt.update(grads, opt_state, params)
-        return params, opt_state, loss
-
-    return step
+# Zeroth-order engines (mezo + the structured variants) are registered by
+# the pluggable ZO subsystem — one engine per sampler × query combination.
+from repro.zo import engines as _zo_engines  # noqa: E402,F401  (self-registers)

@@ -97,7 +97,14 @@ class TrainSpec:
 
     @classmethod
     def from_cli_args(cls, argv=None) -> "TrainSpec":
-        ns = build_arg_parser().parse_args(argv)
+        return cls.from_namespace(build_arg_parser().parse_args(argv))
+
+    @classmethod
+    def from_namespace(cls, ns) -> "TrainSpec":
+        """Spec from a parsed :func:`build_arg_parser` namespace. Extra
+        attributes are ignored — launchers with their own flags (e.g.
+        ``launch/serve.py``'s ``--max-len``) extend the generated parser and
+        still get a spec from the shared fields."""
         kw = {f.name: getattr(ns, f.name) for f in dataclasses.fields(cls)
               if f.metadata.get("cli", True)}
         kw["pallas_interpret"] = {"on": True, "off": False,

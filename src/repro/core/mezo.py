@@ -1,55 +1,27 @@
-"""MeZO baseline (paper §3.2): SPSA zeroth-order gradient estimation.
+"""MeZO baseline (paper §3.2) — compatibility shim over ``repro.zo``.
 
-Two forward passes with ±ε z perturbations of the LoRA parameters; the
-projected-gradient scalar scales z as the update direction. As in the MeZO
-paper, the perturbation is regenerated from the seed instead of stored
-(inference-level memory). Gradient-quality metrics for Table 3 live in
-``core.gradcheck``.
+The actual estimator machinery lives in the pluggable zeroth-order
+subsystem: ``repro.zo.samplers`` (probe distributions), ``repro.zo.
+estimator`` (the generic multi-query SPSA loop) and ``repro.zo.engines``
+(the ``mezo*`` engine registrations). This module keeps the historical
+``core.mezo.spsa_grad`` / ``train_step`` entry points alive with their
+original signatures and **bit-identical** results (dense sampler, one
+query — pinned by tests/test_zo.py's shim-equivalence test).
+
+Gradient-quality metrics for Table 3 live in ``core.gradcheck``; the
+engine-vs-exact probe harness in ``repro.zo.gradquality``.
 """
 from __future__ import annotations
 
-from typing import Tuple
-
-import jax
-import jax.numpy as jnp
-
-from repro.api.policy import PLAIN
 from repro.configs.base import ArchConfig
-from repro.models import model as model_lib
-
-
-def _perturb(train, key, eps_signed):
-    """p + eps·z with z ~ N(0, I), z regenerated from key (not stored)."""
-    leaves, treedef = jax.tree_util.tree_flatten(train)
-    keys = jax.random.split(key, len(leaves))
-    out = [p + eps_signed * jax.random.normal(k, p.shape, p.dtype)
-           for p, k in zip(leaves, keys)]
-    return jax.tree_util.tree_unflatten(treedef, out)
+from repro.zo import estimator as _estimator
 
 
 def spsa_grad(params, cfg: ArchConfig, batch: dict, key, eps: float = 1e-3):
     """MeZO gradient estimate over LoRA params: ((L+ − L−)/2ε) · z."""
-    train, frozen = model_lib.split_params(params)
-
-    def loss(t):
-        return model_lib.loss_fn(model_lib.merge_params(t, frozen), cfg, batch,
-                                 policy=PLAIN)
-
-    l_plus = loss(_perturb(train, key, +eps))
-    l_minus = loss(_perturb(train, key, -eps))
-    proj = (l_plus - l_minus) / (2.0 * eps)
-
-    leaves, treedef = jax.tree_util.tree_flatten(train)
-    keys = jax.random.split(key, len(leaves))
-    grads = [proj.astype(p.dtype) * jax.random.normal(k, p.shape, p.dtype)
-             for p, k in zip(leaves, keys)]
-    grad_tree = jax.tree_util.tree_unflatten(treedef, grads)
-    return 0.5 * (l_plus + l_minus), grad_tree
+    return _estimator.spsa_grad(params, cfg, batch, key, eps=eps)
 
 
 def train_step(params, cfg: ArchConfig, batch: dict, key, lr: float,
                eps: float = 1e-3):
-    loss, grads = spsa_grad(params, cfg, batch, key, eps)
-    train, frozen = model_lib.split_params(params)
-    new_train = jax.tree_util.tree_map(lambda p, g: p - lr * g, train, grads)
-    return model_lib.merge_params(new_train, frozen), loss
+    return _estimator.train_step(params, cfg, batch, key, lr, eps)

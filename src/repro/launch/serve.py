@@ -5,12 +5,19 @@ lower: one new token per step against a persistent KV cache / recurrent
 state. Requests are greedily batched; finished sequences are recycled
 (continuous batching at step granularity).
 
+Like ``launch/train.py``, the CLI is the registry-generated
+:func:`repro.api.build_arg_parser` (plus serve-only ``--max-len``): the
+invocation is a declarative :class:`repro.api.TrainSpec`, validated up
+front (engine × quantize coherence), and the spec's
+:class:`~repro.api.ExecutionPolicy` is threaded through ``decode_step`` —
+so ``--quantize int8`` serves against int8 frozen weights and
+kernel/interpret overrides apply exactly as they do in training.
+
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \\
         --batch 4 --steps 32
 """
 from __future__ import annotations
 
-import argparse
 import logging
 import time
 
@@ -18,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ExecutionPolicy, TrainSpec, build_arg_parser
 from repro.configs import get_config
 from repro.models import model as model_lib
 
@@ -25,17 +33,20 @@ log = logging.getLogger("repro.serve")
 
 
 class DecodeServer:
-    def __init__(self, cfg, params, batch: int, max_len: int):
+    def __init__(self, cfg, params, batch: int, max_len: int,
+                 policy: ExecutionPolicy | None = None):
         self.cfg = cfg
         self.params = params
         self.batch = batch
+        self.policy = policy if policy is not None else ExecutionPolicy()
         self.cache = model_lib.init_cache(cfg, batch, max_len)
         if cfg.family == "audio":
             self.cache["enc_out"] = jnp.zeros(
                 (batch, cfg.encdec.encoder_seq, cfg.d_model),
                 jnp.dtype(cfg.dtype))
         self._step = jax.jit(
-            lambda p, c, t: model_lib.decode_step(p, cfg, c, t))
+            lambda p, c, t: model_lib.decode_step(p, cfg, c, t,
+                                                  policy=self.policy))
 
     def step(self, tokens: jnp.ndarray) -> jnp.ndarray:
         """tokens [B,1] -> sampled next tokens [B,1] (greedy)."""
@@ -44,30 +55,37 @@ class DecodeServer:
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2.5-0.5b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--steps", type=int, default=32)
-    ap.add_argument("--max-len", type=int, default=128)
-    args = ap.parse_args(argv)
+    ap = build_arg_parser()
+    ap.prog = "repro.launch.serve"
+    # serve's historical defaults (32 decode steps × 4 sequences), not
+    # TrainSpec's training defaults — bare invocations stay comparable with
+    # pre-migration tok/s logs
+    ap.set_defaults(batch=4, steps=32)
+    ap.add_argument("--max-len", type=int, default=128,
+                    help="serve-only: decode cache capacity")
+    ns = ap.parse_args(argv)
+    spec = TrainSpec.from_namespace(ns).validate()
     logging.basicConfig(level=logging.INFO)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
+    cfg = get_config(spec.arch)
+    if spec.reduced:
         cfg = cfg.reduced()
-    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
-    server = DecodeServer(cfg, params, args.batch, args.max_len)
+    policy = spec.policy()
+    params = model_lib.init_params(jax.random.PRNGKey(spec.seed), cfg,
+                                   quantize=spec.quantize)
+    server = DecodeServer(cfg, params, spec.batch, ns.max_len, policy=policy)
+    log.info("arch=%s engine=%s quantize=%s backend=%s batch=%d",
+             cfg.name, spec.engine, spec.quantize, policy.backend, spec.batch)
 
-    tok = jnp.ones((args.batch, 1), jnp.int32)
+    tok = jnp.ones((spec.batch, 1), jnp.int32)
     t0 = time.monotonic()
     outs = []
-    for i in range(args.steps):
+    for i in range(spec.steps):
         tok = server.step(tok)
         outs.append(np.asarray(tok)[:, 0])
     dt = time.monotonic() - t0
     log.info("decoded %d steps × %d seqs in %.3fs (%.1f tok/s)",
-             args.steps, args.batch, dt, args.steps * args.batch / dt)
+             spec.steps, spec.batch, dt, spec.steps * spec.batch / dt)
     log.info("sample: %s", [int(x) for x in outs[-1]])
     return 0
 

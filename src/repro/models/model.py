@@ -406,10 +406,14 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int):
     raise ValueError(fam)
 
 
-def decode_step(params, cfg: ArchConfig, cache, tokens: Array):
-    """One decode step. tokens: [B, 1]. Returns (logits [B,1,V], new cache)."""
-    # inference: the structured custom_vjp forwards == plain forwards
-    policy = STRUCTURED
+def decode_step(params, cfg: ArchConfig, cache, tokens: Array, *,
+                policy: ExecutionPolicy = STRUCTURED):
+    """One decode step. tokens: [B, 1]. Returns (logits [B,1,V], new cache).
+
+    ``policy`` selects the forward execution regime (inference: the
+    structured custom_vjp forwards == plain forwards; quantized params
+    carry their format in the tree, dequantized per the policy's backend).
+    """
     x = layers.embed(params["embed"], tokens, cfg)
     fam = cfg.family
     new_cache = dict(cache)
@@ -425,7 +429,8 @@ def decode_step(params, cfg: ArchConfig, cache, tokens: Array):
                     bp = jax.tree_util.tree_map(lambda t: t[i], gp)
                     lc = gc[f"l{i}"]
                     x, nc = dense_block(bp, x, cfg, cache=lc, pos=lc["len"],
-                                        window=cfg.window_pattern[i])
+                                        window=cfg.window_pattern[i],
+                                        policy=policy)
                     ncs[f"l{i}"] = nc
                 return x, ncs
 
@@ -436,12 +441,14 @@ def decode_step(params, cfg: ArchConfig, cache, tokens: Array):
             if "block0" in params:
                 x, nc0 = dense_block(params["block0"], x, cfg,
                                      cache=cache["block0"],
-                                     pos=cache["block0"]["len"])
+                                     pos=cache["block0"]["len"],
+                                     policy=policy)
                 new_cache["block0"] = nc0
 
             def body(x, bs):
                 bp, lc = bs
-                x, nc = blk(bp, x, cfg, cache=lc, pos=lc["len"])
+                x, nc = blk(bp, x, cfg, cache=lc, pos=lc["len"],
+                            policy=policy)
                 return x, nc
 
             x, nc = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
@@ -449,7 +456,7 @@ def decode_step(params, cfg: ArchConfig, cache, tokens: Array):
     elif fam == "ssm":
         def body(x, bs):
             bp, st = bs
-            x, ns = rwkv6.rwkv_block(bp, x, cfg, state=st)
+            x, ns = rwkv6.rwkv_block(bp, x, cfg, state=st, policy=policy)
             return x, ns
 
         x, ns = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
@@ -464,10 +471,12 @@ def decode_step(params, cfg: ArchConfig, cache, tokens: Array):
             for i in range(gsz):
                 bp, st = gp[f"l{i}"], gc[f"l{i}"]
                 if pat[i] == "R":
-                    x, ns = griffin.recurrent_block(bp, x, cfg, state=st)
+                    x, ns = griffin.recurrent_block(bp, x, cfg, state=st,
+                                                    policy=policy)
                 else:
                     x, ns = dense_block(bp, x, cfg, cache=st, pos=st["len"],
-                                        window=cfg.hybrid.window)
+                                        window=cfg.hybrid.window,
+                                        policy=policy)
                 nstates[f"l{i}"] = ns
             return x, nstates
 
@@ -478,10 +487,11 @@ def decode_step(params, cfg: ArchConfig, cache, tokens: Array):
         for i, (bp, st) in enumerate(zip(params["tail"], cache["tail"])):
             li = n_groups * gsz + i
             if pat[li % gsz] == "R":
-                x, ns = griffin.recurrent_block(bp, x, cfg, state=st)
+                x, ns = griffin.recurrent_block(bp, x, cfg, state=st,
+                                                policy=policy)
             else:
                 x, ns = dense_block(bp, x, cfg, cache=st, pos=st["len"],
-                                    window=cfg.hybrid.window)
+                                    window=cfg.hybrid.window, policy=policy)
             ntail.append(ns)
         new_cache["tail"] = ntail
     elif fam == "audio":
@@ -491,14 +501,20 @@ def decode_step(params, cfg: ArchConfig, cache, tokens: Array):
         def body(x, bs):
             bp, lc = bs
             h, nc = layers.attention(bp["attn"],
-                                     layers.norm(bp["ln1"], x, cfg), cfg,
-                                     cache=lc, pos=lc["len"], use_rope=False)
+                                     layers.norm(bp["ln1"], x, cfg,
+                                                 policy=policy), cfg,
+                                     cache=lc, pos=lc["len"], use_rope=False,
+                                     policy=policy)
             x = x + h
             h, _ = layers.attention(bp["xattn"],
-                                    layers.norm(bp["lnx"], x, cfg), cfg,
-                                    causal=False, kv_x=enc_out, use_rope=False)
+                                    layers.norm(bp["lnx"], x, cfg,
+                                                policy=policy), cfg,
+                                    causal=False, kv_x=enc_out, use_rope=False,
+                                    policy=policy)
             x = x + h
-            x = x + layers.mlp(bp["mlp"], layers.norm(bp["ln2"], x, cfg), cfg)
+            x = x + layers.mlp(bp["mlp"],
+                               layers.norm(bp["ln2"], x, cfg, policy=policy),
+                               cfg, policy=policy)
             return x, nc
 
         x, nc = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))

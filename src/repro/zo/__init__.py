@@ -1,0 +1,31 @@
+"""repro.zo: pluggable zeroth-order estimators + gradient-quality probes.
+
+Two halves (see docs/zo.md):
+
+* **estimators** — :class:`~repro.zo.samplers.PerturbationSampler` (seed-
+  replay probe directions, regenerated from a PRNG key and never stored)
+  with dense / sparse / low-rank / blockwise built-ins, and the generic
+  SPSA estimator (:func:`~repro.zo.estimator.spsa_grad`, multi-query
+  capable) they plug into. ``repro.zo.engines`` registers every variant as
+  a ``mezo*`` engine via ``@register_engine`` — CLI / benchmark-sweep /
+  memsim / README-matrix membership follows automatically.
+* **diagnostics** — :func:`~repro.zo.gradquality.probe` /
+  :func:`~repro.zo.gradquality.probe_over_steps` score any registered
+  engine's gradient estimate against the exact MeSP reference (the paper's
+  §5.6 cosine ≈ 0.001 finding), driving ``benchmarks/gradient_quality.py``.
+
+``core.mezo`` is a thin compatibility shim over this package.
+"""
+from repro.zo.estimator import (perturb, spsa_grad, spsa_grad_from_loss,
+                                train_step)
+from repro.zo.samplers import (SAMPLERS, BlockwiseSampler, DenseSampler,
+                               LowRankSampler, PerturbationSampler,
+                               SparseSampler, get_sampler, register_sampler,
+                               sampler_names)
+
+__all__ = [
+    "BlockwiseSampler", "DenseSampler", "LowRankSampler",
+    "PerturbationSampler", "SAMPLERS", "SparseSampler", "get_sampler",
+    "perturb", "register_sampler", "sampler_names", "spsa_grad",
+    "spsa_grad_from_loss", "train_step",
+]

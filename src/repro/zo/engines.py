@@ -1,0 +1,99 @@
+"""ZO engine registrations: every sampler × query combination as an engine.
+
+Importing this module (done by ``repro.api.engines``, i.e. lazily by the
+registry) registers one engine per entry in ``_VARIANTS``. Each registration
+goes through the ordinary ``@register_engine`` path, so the CLI ``--engine``
+choices, the benchmark sweep, ``benchmarks/memsim`` resident-memory tables
+and the README engine-matrix check all pick the variants up with **zero
+edits** to ``launch/``, ``benchmarks/run.py`` or ``models/*`` (the PR 3
+property, pinned by tests/test_api.py).
+
+All ZO engines share the estimator in ``repro.zo.estimator``; the variants
+differ only in the :class:`~repro.zo.samplers.PerturbationSampler` and the
+number of averaged probes. ``backend=None`` (two plain forwards, no
+backward) is what marks an engine as zeroth-order throughout the repo —
+``benchmarks/gradient_quality.py`` selects its sweep that way.
+
+To add a new variant: register a sampler (``repro.zo.samplers``), add a
+``_Variant`` row here, document it in the README matrix (CI enforces the
+last step). docs/zo.md has the walkthrough.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+
+from repro.api.registry import register_engine
+from repro.zo import estimator
+from repro.zo.samplers import get_sampler
+
+
+@dataclasses.dataclass(frozen=True)
+class _Variant:
+    engine: str            # registered engine name
+    sampler: str           # repro.zo.samplers registry name
+    sampler_kw: tuple      # sorted (key, value) pairs for the factory
+    queries: int           # probes averaged per step
+    memsim: str            # analytical retention model (benchmarks/memsim)
+    paper: str
+    description: str
+
+
+_VARIANTS: Tuple[_Variant, ...] = (
+    _Variant("mezo", "dense", (), 1, "mezo", "§3.2",
+             "MeZO baseline: SPSA zeroth-order estimate from two plain "
+             "forward passes"),
+    _Variant("mezo_sparse", "sparse", (("rho", 0.10),), 1, "mezo_sparse",
+             "§5.6 + 2402.15751",
+             "Sparse-MeZO-style SPSA: probe masked to the top-10% |w| "
+             "coordinates per leaf (mask recomputed, never stored)"),
+    _Variant("mezo_lowrank", "lowrank", (), 1, "mezo",
+             "§5.6 + 2410.07698",
+             "low-rank-structured SPSA: rank-1 u vT probe per LoRA factor, "
+             "scaled by the paired factor's RMS (chain-rule magnitude "
+             "signal)"),
+    _Variant("mezo_block", "blockwise", (), 1, "mezo", "§5.6",
+             "blockwise SPSA: one transformer block perturbed per probe "
+             "(stacked leaves masked to a shared layer index)"),
+    _Variant("mezo_avg4", "dense", (), 4, "mezo", "§3.2 + §5.6",
+             "MeZO with multi-query averaging: mean of 4 independent dense "
+             "SPSA probes per step (variance / 4)"),
+)
+
+
+def _register(v: _Variant):
+    sampler = get_sampler(v.sampler, **dict(v.sampler_kw))
+
+    def vag(params, cfg, batch, *, policy, key=None):
+        # policy is accepted for hook uniformity; ZO probes always run the
+        # plain forward regime (no backward exists to select)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return estimator.spsa_grad(params, cfg, batch, key, sampler=sampler,
+                                   queries=v.queries)
+
+    @register_engine(v.engine, backend=None, memsim=v.memsim, paper=v.paper,
+                     value_and_grad=vag, description=v.description)
+    def build(spec, cfg, opt, policy, _v=v, _sampler=sampler):
+        # perturbation stream derives from the spec's seed (folded per step)
+        base_key = jax.random.PRNGKey(spec.seed)
+
+        def step(params, opt_state, batch):
+            key = jax.random.fold_in(base_key, opt_state["step"])
+            loss, grads = estimator.spsa_grad(params, cfg, batch, key,
+                                              sampler=_sampler,
+                                              queries=_v.queries)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        return step
+
+    return build
+
+
+# The authoritative "which engines are ZO" query is registry-derived
+# (repro.zo.gradquality.zo_engine_names) so that engines registered outside
+# _VARIANTS — the docs/zo.md walkthrough path — are included too.
+for _v in _VARIANTS:
+    _register(_v)

@@ -1,0 +1,100 @@
+"""The generic SPSA estimator over any sampler (paper §3.2, generalized).
+
+Two forward passes per probe at ``θ ± ε z`` give the projected gradient
+``(L₊ − L₋)/2ε``, which scales the regenerated ``z`` as the estimate; with
+``queries=k`` the estimate is the mean over k independent probes (variance
+↓ 1/k, pinned monotone in tests/test_zo.py). Perturbations are regenerated
+from the PRNG key at every use — nothing the size of the parameters is ever
+stored (see ``repro.zo.samplers``).
+
+``spsa_grad_from_loss`` is deliberately loss-agnostic (used by the toy
+quadratic estimator-contract tests); ``spsa_grad`` binds it to the model
+stack's LoRA split and is what the ``mezo*`` engine registrations — and the
+``core.mezo`` compatibility shim — call. With the dense sampler and one
+query it reproduces the original ``core.mezo.spsa_grad`` bit-for-bit (same
+leaf order, same per-leaf key split, same op sequence).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.policy import PLAIN, ExecutionPolicy
+from repro.configs.base import ArchConfig
+from repro.zo.samplers import DenseSampler, PerturbationSampler
+
+
+def perturb(train, z, eps_signed):
+    """θ + ε·z leafwise (ε may be negative). Pure/out-of-place: the caller
+    keeps ``train``, so no inverse pass over mutated parameters is needed."""
+    return jax.tree_util.tree_map(lambda p, zi: p + eps_signed * zi, train, z)
+
+
+def spsa_grad_from_loss(loss_fn, train, key, *,
+                        sampler: PerturbationSampler,
+                        eps: float = 1e-3, queries: int = 1):
+    """(mean loss, SPSA gradient estimate over ``train``) for any scalar
+    ``loss_fn(train)``. ``queries`` probes are averaged."""
+    if queries < 1:
+        raise ValueError(f"queries must be >= 1, got {queries}")
+    keys = [key] if queries == 1 else list(jax.random.split(key, queries))
+
+    loss_acc, grad_acc = None, None
+    for k in keys:
+        # z is regenerated from the key at each of its three uses (+ε, −ε,
+        # gradient construction) — bit-identical by the seed-replay contract
+        # — so no z-sized buffer is held across the forward passes. Under
+        # jit XLA dedupes the regeneration; eagerly this is the same
+        # transient-only footprint the original MeZO loop had.
+        l_plus = loss_fn(perturb(train, sampler.sample(k, train), +eps))
+        l_minus = loss_fn(perturb(train, sampler.sample(k, train), -eps))
+        proj = (l_plus - l_minus) / (2.0 * eps)
+        g = jax.tree_util.tree_map(
+            lambda p, zi: proj.astype(p.dtype) * zi, train,
+            sampler.sample(k, train))
+        loss = 0.5 * (l_plus + l_minus)
+        if grad_acc is None:
+            loss_acc, grad_acc = loss, g
+        else:
+            loss_acc = loss_acc + loss
+            grad_acc = jax.tree_util.tree_map(jnp.add, grad_acc, g)
+    if queries > 1:
+        inv = 1.0 / queries
+        loss_acc = loss_acc * inv
+        grad_acc = jax.tree_util.tree_map(lambda g: g * inv, grad_acc)
+    return loss_acc, grad_acc
+
+
+def spsa_grad(params, cfg: ArchConfig, batch: dict, key, *,
+              sampler: PerturbationSampler | None = None,
+              eps: float = 1e-3, queries: int = 1,
+              policy: ExecutionPolicy = PLAIN):
+    """ZO gradient estimate over the LoRA params of the full model.
+
+    ``policy`` selects the *forward* execution regime for the two probe
+    passes (no backward ever runs); the plain backend is the MeZO setting.
+    """
+    from repro.models import model as model_lib
+
+    sampler = sampler if sampler is not None else DenseSampler()
+    train, frozen = model_lib.split_params(params)
+
+    def loss(t):
+        return model_lib.loss_fn(model_lib.merge_params(t, frozen), cfg,
+                                 batch, policy=policy)
+
+    return spsa_grad_from_loss(loss, train, key, sampler=sampler, eps=eps,
+                               queries=queries)
+
+
+def train_step(params, cfg: ArchConfig, batch: dict, key, lr: float,
+               eps: float = 1e-3, *,
+               sampler: PerturbationSampler | None = None, queries: int = 1):
+    """One plain-SGD ZO step (the ``core.mezo.train_step`` contract)."""
+    from repro.models import model as model_lib
+
+    loss, grads = spsa_grad(params, cfg, batch, key, sampler=sampler,
+                            eps=eps, queries=queries)
+    train, frozen = model_lib.split_params(params)
+    new_train = jax.tree_util.tree_map(lambda p, g: p - lr * g, train, grads)
+    return model_lib.merge_params(new_train, frozen), loss

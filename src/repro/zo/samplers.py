@@ -1,0 +1,239 @@
+"""Perturbation samplers: the pluggable half of the ZO estimator.
+
+A *sampler* decides the distribution of the SPSA probe direction ``z`` over
+the trainable (LoRA) pytree. Every sampler is **seed-replay based**: ``z`` is
+a pure function of ``(key, train)`` and is regenerated wherever it is needed
+(perturb +ε, perturb −ε, gradient construction) instead of being stored —
+the property that gives MeZO-style methods their inference-level memory
+footprint. ``sample(key, train)`` twice with the same key is bit-identical
+(pinned by tests/test_zo.py).
+
+Built-ins (the design space from the related work):
+
+* ``dense``     — z ~ N(0, I) over every LoRA coordinate (vanilla MeZO SPSA,
+  paper §3.2). ``E[zzᵀ] = I``.
+* ``sparse``    — dense z masked to the top-ρ fraction of coordinates by
+  frozen-magnitude ``|w|`` per leaf (Sparse MeZO, arXiv:2402.15751). The
+  mask is recomputed from the parameters, never stored. ``E[zzᵀ] = diag(m)``
+  — the estimate lives in a subspace ~1/ρ smaller, which is exactly where
+  its cosine-similarity gain comes from.
+* ``lowrank``   — structured rank-1 noise ``z = s·u vᵀ`` over the trailing
+  two axes of each LoRA factor (low-rank-structured ZO, arXiv:2410.07698):
+  ``(m+n)`` random degrees of freedom instead of ``m·n``, with a per-leaf
+  scale ``s`` from the *paired* factor's RMS — the LoRA chain rule's free
+  gradient-magnitude signal (``∂L/∂A ∝ |B|``, ``∂L/∂B ∝ |A|``).
+* ``blockwise`` — one transformer block perturbed per probe: stacked
+  ``[L, ...]`` leaves are masked to a single shared layer index drawn from
+  the key, rescaled by √L so ``E[zzᵀ] = I`` still holds.
+
+``register_sampler`` adds a new sampler; ``repro.zo.engines`` turns each
+registered sampler into a ``mezo*`` engine registration (docs/zo.md walks
+through adding your own).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+
+@runtime_checkable
+class PerturbationSampler(Protocol):
+    """Deterministic probe-direction generator over the trainable pytree."""
+
+    #: registry name (also the engine-name suffix, see repro.zo.engines)
+    name: str
+
+    def sample(self, key, train):
+        """z with the structure/shapes/dtypes of ``train``, a pure function
+        of ``(key, train)`` — bit-identical on replay with the same key."""
+        ...
+
+
+def _leaf_keys(key, leaves):
+    return jax.random.split(key, len(leaves))
+
+
+class DenseSampler:
+    """Vanilla MeZO/SPSA direction: z ~ N(0, I) per LoRA coordinate."""
+
+    name = "dense"
+
+    def sample(self, key, train):
+        leaves, treedef = jax.tree_util.tree_flatten(train)
+        keys = _leaf_keys(key, leaves)
+        zs = [jax.random.normal(k, p.shape, p.dtype)
+              for p, k in zip(leaves, keys)]
+        return jax.tree_util.tree_unflatten(treedef, zs)
+
+
+class SparseSampler:
+    """Sparse MeZO direction: dense z masked to the top-ρ |w| coordinates.
+
+    The mask is a pure function of the current parameter magnitudes
+    (per-leaf ``|w| ≥ quantile(|w|, 1−ρ)``) — recomputed at every probe,
+    never stored, so the memory-free property is preserved. A leaf whose
+    magnitudes are all equal (e.g. LoRA B at init, identically zero)
+    degenerates to a dense perturbation of that leaf.
+    """
+
+    name = "sparse"
+
+    def __init__(self, rho: float = 0.10):
+        if not 0.0 < rho <= 1.0:
+            raise ValueError(f"rho must be in (0, 1], got {rho}")
+        self.rho = rho
+
+    def _mask(self, p):
+        # boolean (1 byte/param — the footprint benchmarks/memsim charges
+        # for the mezo_sparse model); the f32 |w| copy for the quantile is
+        # per-leaf transient probe working set
+        mag = jnp.abs(p).astype(jnp.float32)
+        thresh = jnp.quantile(mag.reshape(-1), 1.0 - self.rho)
+        return mag >= thresh
+
+    def sample(self, key, train):
+        leaves, treedef = jax.tree_util.tree_flatten(train)
+        keys = _leaf_keys(key, leaves)
+        zs = [jnp.where(self._mask(p),
+                        jax.random.normal(k, p.shape, p.dtype),
+                        jnp.zeros((), p.dtype))
+              for p, k in zip(leaves, keys)]
+        return jax.tree_util.tree_unflatten(treedef, zs)
+
+
+def _paired_factor_scales(train):
+    """Per-leaf RMS of the *paired* LoRA factor (B for an ``a`` leaf, A for
+    a ``b`` leaf; 1.0 when no pair exists).
+
+    This is the chain-rule magnitude signal the LoRA parametrization gives
+    away for free: ``∂L/∂A = xᵀδBᵀ`` scales with ``|B|`` and ``∂L/∂B = hᵀδ``
+    with ``|h| ∝ |A|`` — so the paired factor's magnitude predicts each
+    leaf's gradient scale *from parameters alone* (no gradient peeked,
+    nothing stored). Early in adaptation ``|B| ≪ |A|``, which concentrates
+    the probe where the gradient mass actually is.
+    """
+    def entry(k):
+        # DictKey has .key, SequenceKey (list levels, e.g. hybrid "tail")
+        # has .idx — both must distinguish siblings or per-layer pairs merge
+        return getattr(k, "key", getattr(k, "idx", None))
+
+    leaves, _ = jax.tree_util.tree_flatten_with_path(train)
+    by_parent: dict = {}
+    for path, p in leaves:
+        parent = tuple(entry(k) for k in path[:-1])
+        by_parent.setdefault(parent, {})[entry(path[-1])] = p
+    scales = []
+    for path, p in leaves:
+        parent = tuple(entry(k) for k in path[:-1])
+        pair = by_parent[parent].get({"a": "b", "b": "a"}.get(
+            entry(path[-1])))
+        scales.append(jnp.sqrt(jnp.mean(pair.astype(jnp.float32) ** 2))
+                      if pair is not None else jnp.float32(1.0))
+    return scales
+
+
+class LowRankSampler:
+    """Structured rank-1 direction z = s · u vᵀ over each leaf's trailing
+    axes (low-rank-structured ZO, arXiv:2410.07698 flavour).
+
+    For a stacked LoRA factor ``[L, m, n]`` this draws ``u ~ N(0,I) [L,m,1]``
+    and ``v ~ N(0,I) [L,1,n]`` — ``L(m+n)`` random degrees of freedom instead
+    of ``Lmn``, concentrating the probe on the low-rank structure the LoRA
+    parametrization already has. ``s`` is the paired factor's RMS
+    (:func:`_paired_factor_scales`), a parameter-only preconditioner that
+    weights each leaf's probe variance by its predicted gradient scale;
+    ``cross_scale=False`` turns it off (s ≡ 1). Leaves with fewer than two
+    axes fall back to (scaled) dense noise.
+    """
+
+    name = "lowrank"
+
+    def __init__(self, cross_scale: bool = True):
+        self.cross_scale = cross_scale
+
+    def sample(self, key, train):
+        leaves, treedef = jax.tree_util.tree_flatten(train)
+        keys = _leaf_keys(key, leaves)
+        scales = (_paired_factor_scales(train) if self.cross_scale
+                  else [jnp.float32(1.0)] * len(leaves))
+
+        def one(p, k, s):
+            s = s.astype(p.dtype)
+            if p.ndim < 2:
+                return s * jax.random.normal(k, p.shape, p.dtype)
+            ku, kv = jax.random.split(k)
+            m, n = p.shape[-2], p.shape[-1]
+            u = jax.random.normal(ku, p.shape[:-2] + (m, 1), p.dtype)
+            v = jax.random.normal(kv, p.shape[:-2] + (1, n), p.dtype)
+            return s * u * v  # broadcast outer product over trailing axes
+
+        return jax.tree_util.tree_unflatten(
+            treedef, [one(p, k, s) for p, k, s in zip(leaves, keys, scales)])
+
+
+class BlockwiseSampler:
+    """One transformer block per probe (coordinate-blockwise SPSA).
+
+    One uniform draw from the key selects a layer index; every stacked leaf
+    ``[L, ...]`` is masked to that index (modulo its own leading dim) and
+    rescaled by √L, so ``E[zzᵀ] = I`` is preserved while each probe touches
+    a single block's parameters. Unstacked (< 3-dim) leaves are perturbed
+    densely.
+    """
+
+    name = "blockwise"
+
+    def sample(self, key, train):
+        k_layer, k_noise = jax.random.split(key)
+        u = jax.random.uniform(k_layer)  # shared draw → coherent layer pick
+        leaves, treedef = jax.tree_util.tree_flatten(train)
+        keys = _leaf_keys(k_noise, leaves)
+
+        def one(p, k):
+            z = jax.random.normal(k, p.shape, p.dtype)
+            if p.ndim < 3:
+                return z
+            n = p.shape[0]
+            idx = jnp.minimum((u * n).astype(jnp.int32), n - 1)
+            mask = jax.nn.one_hot(idx, n, dtype=p.dtype)
+            mask = mask.reshape((n,) + (1,) * (p.ndim - 1))
+            return z * mask * jnp.asarray(n, p.dtype) ** 0.5
+
+        return jax.tree_util.tree_unflatten(
+            treedef, [one(p, k) for p, k in zip(leaves, keys)])
+
+
+# ---------------------------------------------------------------- registry
+
+#: name -> zero/keyword-arg factory returning a PerturbationSampler
+SAMPLERS: Dict[str, Callable[..., PerturbationSampler]] = {}
+
+
+def register_sampler(factory: Callable[..., PerturbationSampler],
+                     name: str | None = None):
+    """Register a sampler factory (class or callable). Returns the factory so
+    it can be used as a decorator: ``@register_sampler``."""
+    key = name or factory.name
+    if key in SAMPLERS:
+        raise ValueError(f"sampler {key!r} is already registered")
+    SAMPLERS[key] = factory
+    return factory
+
+
+def get_sampler(name: str, **kw) -> PerturbationSampler:
+    try:
+        factory = SAMPLERS[name]
+    except KeyError:
+        raise KeyError(f"unknown sampler {name!r}; registered: "
+                       f"{sorted(SAMPLERS)}") from None
+    return factory(**kw)
+
+
+def sampler_names():
+    return tuple(SAMPLERS)
+
+
+for _cls in (DenseSampler, SparseSampler, LowRankSampler, BlockwiseSampler):
+    register_sampler(_cls)

@@ -52,10 +52,44 @@ def test_parser_engine_choices_come_from_registry():
 def test_builtin_engines_registered():
     names = set(engine_names())
     assert {"mesp", "mesp_pallas", "mesp_seq", "mebp", "store_h",
-            "mezo"} <= names
+            "mezo", "mezo_sparse", "mezo_lowrank", "mezo_block",
+            "mezo_avg4"} <= names
     # §4.3 sequential engine is first-class: registered, CLI-selectable
     seq = get_engine("mesp_seq")
     assert seq.backend == "structured" and seq.memsim == "mesp"
+
+
+def test_zo_engines_complete_across_cli_bench_memsim_readme():
+    """Completeness: every registered ZO engine (backend=None + a
+    value_and_grad hook, i.e. the repro.zo registrations) is a CLI choice,
+    a benchmark-sweep member, memsim-resolvable and a README-matrix row —
+    with zero edits to launch/train.py, benchmarks/run.py or models/*."""
+    import importlib.util
+    from pathlib import Path
+
+    from repro.zo.gradquality import zo_engine_names
+
+    zo = zo_engine_names()
+    assert set(zo) >= {"mezo", "mezo_sparse", "mezo_lowrank", "mezo_block",
+                       "mezo_avg4"}
+
+    (engine_action,) = [a for a in build_arg_parser()._actions
+                        if a.dest == "engine"]
+    from benchmarks.run import _engines
+    from benchmarks.memsim import RETENTION_MODELS, _retention_model
+
+    root = Path(__file__).resolve().parent.parent
+    spec = importlib.util.spec_from_file_location(
+        "check_readme_flags", root / "scripts" / "check_readme_flags.py")
+    crf = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(crf)
+    matrix = crf.readme_engine_matrix((root / "README.md").read_text())
+
+    for name in zo:
+        assert name in engine_action.choices
+        assert name in _engines()
+        assert _retention_model(name) in RETENTION_MODELS
+        assert name in matrix, f"README engine matrix missing {name!r}"
 
 
 def test_unknown_engine_error_names_known_engines():
