@@ -1,0 +1,145 @@
+"""Chaos benchmark: what resilience costs, measured.
+
+Runs the same reduced fine-tune twice through the ``repro.api.Trainer``
+facade — once fault-free, once with a deterministic 5-fault chaos plan
+(OOM, checkpoint corruption, process crash, NaN loss, straggler stall at
+five distinct steps) — and reports what recovery cost:
+
+* **steps_to_recover** — steps replayed after restore rewinds;
+* **degradations** — ladder rungs applied (the OOM lands the run on a
+  memsim-validated cheaper spec);
+* **recovery_overhead_pct** — extra wall-clock of the chaos run over the
+  fault-free run (includes backoff, re-jits, replays and the stall itself);
+* **loss_delta** — |final chaos loss − final fault-free loss|: the chaos
+  run must land in the same place, not merely finish.
+
+    PYTHONPATH=src python -m benchmarks.resilience            # full
+    PYTHONPATH=src python -m benchmarks.resilience --smoke    # CI
+
+Writes ``BENCH_resilience.json`` (committed baseline under
+``benchmarks/results/``; ``scripts/check_bench_regression.py --resilience``
+annotates drift against it — never gated, wall-clock depends on the host).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import shutil
+import tempfile
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+BASELINE = os.path.join(RESULTS_DIR, "BENCH_resilience.json")
+
+#: full setting: 24 steps, faults at 5 distinct steps covering every kind
+FULL = dict(steps=24, seq=64, batch=2, ckpt_interval=5,
+            plan="oom@4,corrupt@8,crash@9,nan@14,stall@18:1.2")
+#: CI smoke: same machinery, ~1/2 the steps and a shorter stall
+#: (crash lands between interval saves, so the restore must fall back over
+#: the checkpoint the corrupt event poisoned)
+SMOKE = dict(steps=12, seq=48, batch=2, ckpt_interval=3,
+             plan="oom@2,corrupt@4,crash@5,nan@8,stall@10:0.8")
+
+
+def _fit(spec):
+    from repro.api import Trainer
+
+    t0 = time.monotonic()
+    result = Trainer.from_spec(spec).fit()
+    return result, time.monotonic() - t0
+
+
+def run(smoke: bool = False, arch: str = "qwen2.5-0.5b",
+        seed: int = 0) -> dict:
+    import jax
+
+    from repro.api import TrainSpec
+    from repro.runtime.degrade import predicted_peak_mb
+
+    setting = SMOKE if smoke else FULL
+    workdir = tempfile.mkdtemp(prefix="bench_resilience_")
+    base = TrainSpec(
+        arch=arch, reduced=True, engine="mesp", seed=seed,
+        steps=setting["steps"], seq=setting["seq"], batch=setting["batch"],
+        ckpt_interval=setting["ckpt_interval"],
+        ckpt_dir=os.path.join(workdir, "baseline"),
+        # one stalled step must trigger the supervised restart path
+        straggler_factor=8.0, straggler_limit=1)
+    try:
+        import dataclasses
+        clean, clean_s = _fit(base)
+        chaos_spec = dataclasses.replace(
+            base, ckpt_dir=os.path.join(workdir, "chaos"),
+            inject_faults=setting["plan"])
+        chaos, chaos_s = _fit(chaos_spec)
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+    counters = chaos.fault_counts
+    fs = chaos.final_spec
+    doc = {
+        "benchmark": "resilience",
+        "setting": {**setting, "arch": arch, "seed": seed, "smoke": smoke},
+        "backend": jax.default_backend(),
+        "host": platform.machine(),
+        "fault_free": {
+            "wall_s": round(clean_s, 3),
+            "steps": len(clean.history),
+            "final_loss": round(clean.final_loss, 6),
+        },
+        "chaos": {
+            "wall_s": round(chaos_s, 3),
+            "steps_executed": len(chaos.history),
+            "final_loss": round(chaos.final_loss, 6),
+            "counters": counters,
+            "degradations": chaos.degradations,
+            "final_spec": {"engine": fs.engine, "batch": fs.batch,
+                           "seq": fs.seq, "quantize": fs.quantize},
+            "final_predicted_peak_mb": predicted_peak_mb(fs),
+        },
+        "metrics": {
+            "steps_to_recover": counters.get("steps_replayed", 0),
+            "degradation_events": len(chaos.degradations),
+            "recovery_overhead_pct": round(
+                100.0 * (chaos_s - clean_s) / clean_s, 1),
+            "loss_delta": round(abs(chaos.final_loss - clean.final_loss), 6),
+        },
+    }
+    return doc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI setting: fewer steps, shorter stall")
+    ap.add_argument("--arch", default="qwen2.5-0.5b")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=BASELINE,
+                    help="output JSON path (default: the committed baseline)")
+    args = ap.parse_args(argv)
+
+    doc = run(smoke=args.smoke, arch=args.arch, seed=args.seed)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    m, c = doc["metrics"], doc["chaos"]
+    print(f"resilience: {doc['fault_free']['steps']} fault-free steps "
+          f"{doc['fault_free']['wall_s']}s; chaos survived "
+          f"{sum(c['counters'].get('injected', {}).values())} injected "
+          f"faults in {c['wall_s']}s")
+    print(f"  steps_to_recover={m['steps_to_recover']} "
+          f"degradations={c['degradations']} "
+          f"recovery_overhead={m['recovery_overhead_pct']}% "
+          f"loss_delta={m['loss_delta']}")
+    print(f"  final spec: {c['final_spec']} "
+          f"(predicted peak {c['final_predicted_peak_mb']} MB)")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -19,10 +19,19 @@ per-run cosine is a noisy statistic (SPSA probes), and the CI smoke setting
 deliberately differs from the committed full-run setting — the printout
 flags both.
 
+``--resilience FRESH.json`` annotates a fresh ``benchmarks/resilience.py``
+run (recovery overhead %, steps-to-recover, degradations, loss delta vs the
+fault-free twin) against the committed ``BENCH_resilience.json``. Also
+annotation-only: wall-clock overhead depends on the host, and the smoke
+chaos plan differs from the committed full plan by design. The one hard
+check it *does* make: every fault kind the plan injected must have fired.
+
     PYTHONPATH=src python -m benchmarks.kernels --steps 2 --out /tmp/f.json
     PYTHONPATH=src python scripts/check_bench_regression.py /tmp/f.json
     PYTHONPATH=src python scripts/check_bench_regression.py \\
         --gradquality /tmp/BENCH_gradient_quality_fresh.json
+    PYTHONPATH=src python scripts/check_bench_regression.py \\
+        --resilience /tmp/BENCH_resilience_fresh.json
 """
 from __future__ import annotations
 
@@ -35,6 +44,8 @@ BASELINE = (Path(__file__).resolve().parent.parent / "benchmarks" /
             "results" / "BENCH_kernels.json")
 GQ_BASELINE = (Path(__file__).resolve().parent.parent / "benchmarks" /
                "results" / "BENCH_gradient_quality.json")
+RES_BASELINE = (Path(__file__).resolve().parent.parent / "benchmarks" /
+                "results" / "BENCH_resilience.json")
 
 #: fractional worsening allowed before failing (a schedule is deterministic,
 #: so any change at all is suspicious — 10% leaves room for deliberate
@@ -112,6 +123,43 @@ def annotate_gradquality(fresh_doc: dict, base_doc: dict) -> None:
               f"run — engine unregistered?")
 
 
+def annotate_resilience(fresh_doc: dict, base_doc: dict) -> list[str]:
+    """Print recovery-cost drift vs the committed chaos baseline. Wall-clock
+    and loss figures are annotation-only (host- and setting-dependent); the
+    only gated condition is that every injected fault kind actually fired —
+    a chaos run where a fault silently failed to inject tests nothing."""
+    errors = []
+    fp = fresh_doc.get("setting", {}).get("plan")
+    bp = base_doc.get("setting", {}).get("plan")
+    if fp != bp:
+        print(f"note: chaos plans differ (fresh {fp!r} vs baseline {bp!r}) "
+              f"— recovery figures are indicative only")
+    fm = fresh_doc.get("metrics", {})
+    bm = base_doc.get("metrics", {})
+    for col in ("recovery_overhead_pct", "steps_to_recover",
+                "degradation_events", "loss_delta"):
+        f, b = fm.get(col), bm.get(col)
+        if f is None:
+            print(f"   resilience {col}: missing from fresh run")
+        else:
+            extra = f" (baseline {b})" if b is not None else ""
+            print(f"   resilience {col}: {f}{extra}")
+    chaos = fresh_doc.get("chaos", {})
+    fired = chaos.get("counters", {}).get("injected", {})
+    planned = {e.split("@")[0] for e in (fp or "").split(",") if "@" in e}
+    missing = sorted(planned - set(fired))
+    if missing:
+        errors.append(f"resilience: planned fault kind(s) never fired: "
+                      f"{missing} (fired: {fired})")
+    else:
+        print(f"OK: all planned fault kinds fired: {sorted(fired)}")
+    if chaos.get("degradations"):
+        print(f"   resilience final spec after "
+              f"{chaos['degradations']}: {chaos.get('final_spec')} "
+              f"(predicted peak {chaos.get('final_predicted_peak_mb')} MB)")
+    return errors
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("fresh", nargs="?", default=None,
@@ -121,10 +169,16 @@ def main(argv=None) -> int:
                     help="annotate a fresh BENCH_gradient_quality.json "
                          "against the committed baseline (never gated)")
     ap.add_argument("--gq-baseline", default=str(GQ_BASELINE))
+    ap.add_argument("--resilience", default=None, metavar="FRESH_JSON",
+                    help="annotate a fresh BENCH_resilience.json against "
+                         "the committed baseline (gated only on every "
+                         "planned fault kind having fired)")
+    ap.add_argument("--res-baseline", default=str(RES_BASELINE))
     args = ap.parse_args(argv)
-    if args.fresh is None and args.gradquality is None:
-        ap.error("nothing to do: pass a fresh BENCH_kernels.json and/or "
-                 "--gradquality")
+    if args.fresh is None and args.gradquality is None \
+            and args.resilience is None:
+        ap.error("nothing to do: pass a fresh BENCH_kernels.json, "
+                 "--gradquality, and/or --resilience")
 
     errors = []
     if args.fresh is not None:
@@ -144,6 +198,16 @@ def main(argv=None) -> int:
         with open(args.gq_baseline) as f:
             gq_base = json.load(f)
         annotate_gradquality(gq_fresh, gq_base)
+
+    if args.resilience is not None:
+        with open(args.resilience) as f:
+            res_fresh = json.load(f)
+        with open(args.res_baseline) as f:
+            res_base = json.load(f)
+        res_errors = annotate_resilience(res_fresh, res_base)
+        for e in res_errors:
+            print(f"FAIL: {e}")
+        errors += res_errors
 
     return 1 if errors else 0
 

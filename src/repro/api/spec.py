@@ -46,6 +46,14 @@ class TrainSpec:
     flash_chunk: int = 1024
     pallas_interpret: Optional[bool] = None   # None = auto (off-TPU only)
     fuse_rope: bool = False                   # pallas: RoPE inside the flash kernels
+    # --- resilience: chaos injection, degradation ladder, step guard -------
+    inject_faults: str = ""        # FaultPlan string ("" = no injection)
+    degrade: str = "on"            # memory-pressure ladder on OOM (on/off)
+    guard: str = "on"              # NaN/spike step guard (on/off)
+    guard_budget: int = 8          # anomalous steps rejected before aborting
+    max_retries: int = 3           # consecutive step failures before raising
+    straggler_factor: float = 10.0  # watchdog: slow = factor x EWMA step time
+    straggler_limit: int = 3       # consecutive slow steps before restart
     # --- sharding: not CLI-serializable (PartitionSpec objects); set
     # programmatically by the distributed launchers ------------------------
     act_spec: Any = dataclasses.field(default=None, metadata=_NO_CLI)
@@ -62,6 +70,15 @@ class TrainSpec:
         if self.optimizer not in OPTIMIZERS:
             raise ValueError(f"unknown optimizer {self.optimizer!r}; "
                              f"expected one of {OPTIMIZERS}")
+        for name in ("degrade", "guard"):
+            if getattr(self, name) not in ("on", "off"):
+                raise ValueError(f"--{name} must be 'on' or 'off', "
+                                 f"got {getattr(self, name)!r}")
+        if self.inject_faults:
+            from repro.runtime.faults import FaultPlan
+            # parse errors (unknown kind, bad syntax) surface before compute
+            FaultPlan.from_string(self.inject_faults,
+                                  total_steps=self.steps, seed=self.seed)
         return self
 
     def policy(self) -> ExecutionPolicy:
@@ -152,4 +169,30 @@ def build_arg_parser() -> argparse.ArgumentParser:
     ap.add_argument("--fuse-rope", action="store_true",
                     help="pallas backend: apply RoPE inside the flash "
                          "kernels (q/k rotated in VMEM, no HBM round-trip)")
+    ap.add_argument("--inject-faults", default=d.inject_faults,
+                    help="chaos run: deterministic fault plan, e.g. "
+                         "'oom@4,corrupt@9,crash@9,nan@14,stall@18:1.5' or "
+                         "'random:5' (seeded from --seed); see "
+                         "docs/resilience.md")
+    ap.add_argument("--degrade", default=d.degrade, choices=["on", "off"],
+                    help="on OOM, walk the memory-pressure degradation "
+                         "ladder (halve batch -> leaner engine -> int8 W0 "
+                         "-> truncate seq) instead of retrying the same "
+                         "program")
+    ap.add_argument("--guard", default=d.guard, choices=["on", "off"],
+                    help="reject (skip-and-rewind) steps with NaN/Inf loss "
+                         "or update-norm spikes")
+    ap.add_argument("--guard-budget", type=int, default=d.guard_budget,
+                    help="anomalous steps the guard may reject before the "
+                         "run aborts")
+    ap.add_argument("--max-retries", type=int, default=d.max_retries,
+                    help="consecutive step failures tolerated (budget "
+                         "resets after every successful step)")
+    ap.add_argument("--straggler-factor", type=float,
+                    default=d.straggler_factor,
+                    help="watchdog: a step slower than factor x the EWMA "
+                         "step time is flagged slow")
+    ap.add_argument("--straggler-limit", type=int, default=d.straggler_limit,
+                    help="consecutive slow steps before a supervised "
+                         "restart from checkpoint")
     return ap

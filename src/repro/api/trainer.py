@@ -2,9 +2,17 @@
 
 Wraps everything a training run needs around a TrainSpec: config resolution,
 engine lookup + validation, optimizer, restartable data pipeline, atomic
-checkpointing and the fault-tolerant step driver
-(``runtime.fault_tolerance.run_resilient``).  ``launch/train.py``,
-``examples/finetune_e2e.py`` and the smoke CI all run through this facade.
+checkpointing and the supervised resilient step driver
+(``runtime.fault_tolerance.ResilientLoop``) with the full chaos stack —
+deterministic fault injection (``--inject-faults``), the memory-pressure
+degradation ladder (``runtime/degrade.py``) and the anomaly step guard
+(``runtime/guard.py``). ``launch/train.py``, ``examples/finetune_e2e.py``
+and the smoke CI all run through this facade.
+
+The trainer is *re-specable* mid-run: every checkpoint manifest records the
+spec that produced it, so a restore after a crash reconstitutes the exact
+(possibly degraded) program, and an OOM walks the ladder to a cheaper spec
+while carrying the optimizer state across compatible transitions.
 """
 from __future__ import annotations
 
@@ -25,10 +33,32 @@ class TrainResult:
     params: Any
     opt_state: Any
     history: List  # of runtime.fault_tolerance.StepResult
+    #: runtime.fault_tolerance.FaultCounters — per-fault accounting for the
+    #: run (retries, OOMs, degradations, guard skips, restarts, quarantines)
+    counters: Any = None
+    #: the TrainSpec the run *ended* on (differs from the requested spec
+    #: when the degradation ladder stepped down under memory pressure)
+    final_spec: Optional[TrainSpec] = None
+    #: ladder rungs applied, in order (e.g. ["halve_batch", "quantize_int8"])
+    degradations: List[str] = dataclasses.field(default_factory=list)
 
     @property
     def final_loss(self) -> float:
         return self.history[-1].loss if self.history else float("nan")
+
+    @property
+    def fault_counts(self) -> dict:
+        return self.counters.to_dict() if self.counters is not None else {}
+
+
+#: TrainSpec fields recorded into checkpoint manifests (JSON-safe subset —
+#: everything that round-trips through the CLI)
+_SPEC_FIELDS = tuple(f.name for f in dataclasses.fields(TrainSpec)
+                     if f.metadata.get("cli", True))
+
+
+def _spec_manifest(spec: TrainSpec) -> dict:
+    return {name: getattr(spec, name) for name in _SPEC_FIELDS}
 
 
 class Trainer:
@@ -44,63 +74,202 @@ class Trainer:
         from repro.optim.schedules import constant
 
         self.spec = spec.validate()
-        self.engine: Engine = get_engine(spec.engine)
         if cfg is None:
             cfg = get_config(spec.arch)
             if spec.reduced:
                 cfg = cfg.reduced()
         self.cfg = cfg
-        self.policy = spec.policy()
         self.opt = make_optimizer(spec.optimizer, constant(spec.lr))
-        self.step_fn = jax.jit(
-            self.engine.build_step(spec, cfg, self.opt, self.policy))
+        self._live_spec: Optional[TrainSpec] = None
+        self._switch_to(self.spec)
 
     @classmethod
     def from_spec(cls, spec: TrainSpec, *, cfg=None) -> "Trainer":
         return cls(spec, cfg=cfg)
 
+    # ------------------------------------------------------------ live spec
+    def _switch_to(self, spec: TrainSpec) -> None:
+        """(Re)build engine + jitted step for ``spec``; no-op if unchanged.
+        Raises (without changing live state) when the engine refuses the
+        spec — the degradation path uses that to skip unbuildable rungs."""
+        if spec == self._live_spec:
+            return
+        spec = spec.validate()
+        engine: Engine = get_engine(spec.engine)
+        policy = spec.policy()
+        step_fn = jax.jit(engine.build_step(spec, self.cfg, self.opt,
+                                            policy))
+        self.engine, self.policy, self.step_fn = engine, policy, step_fn
+        self._live_spec = spec
+
+    @property
+    def live_spec(self) -> TrainSpec:
+        """The spec currently compiled (post-degradation, if any)."""
+        return self._live_spec or self.spec
+
     # ---------------------------------------------------------------- state
     def init_state(self):
         from repro.models import model as model_lib
 
+        live = self.live_spec
         params = model_lib.init_params(
             jax.random.PRNGKey(self.spec.seed), self.cfg,
-            quantize=self.spec.quantize)
+            quantize=live.quantize)
         return params, self.opt.init(params)
 
-    def make_data(self):
+    def make_data(self, state=None):
         from repro.data import make_batch_iterator
 
+        live = self.live_spec
         return make_batch_iterator(
-            self.cfg.vocab, self.spec.seq, self.spec.batch,
+            self.cfg.vocab, live.seq, live.batch,
             host_index=jax.process_index(), host_count=jax.process_count(),
-            seed=self.spec.seed)
+            seed=self.spec.seed, state=state)
 
     # ------------------------------------------------------------------ fit
     def fit(self, steps: Optional[int] = None, *,
             data=None, on_step: Optional[Callable] = None,
             straggler=None) -> TrainResult:
-        """Run ``steps`` (default: spec.steps) resilient training steps,
-        resuming from the latest checkpoint in ``spec.ckpt_dir`` if any."""
+        """Run ``steps`` (default: spec.steps) supervised resilient training
+        steps, resuming from the latest checkpoint in ``spec.ckpt_dir`` if
+        any. Fault injection, the degradation ladder and the step guard are
+        all driven by the spec's resilience fields."""
         from repro.checkpoint import Checkpointer
-        from repro.runtime.fault_tolerance import StragglerPolicy, \
-            run_resilient
+        from repro.data.pipeline import DataState, TokenStream
+        from repro.runtime import degrade as degrade_mod
+        from repro.runtime import faults as faults_mod
+        from repro.runtime.fault_tolerance import ResilientLoop, \
+            StragglerPolicy
+        from repro.runtime.guard import StepGuard
 
-        spec = self.spec
-        total = steps if steps is not None else spec.steps
-        it = data if data is not None else self.make_data()
-        ckpt = Checkpointer(spec.ckpt_dir, interval=spec.ckpt_interval)
+        spec0 = self.spec
+        total = steps if steps is not None else spec0.steps
+        self._switch_to(spec0)
+        ckpt = Checkpointer(spec0.ckpt_dir, interval=spec0.ckpt_interval)
+
+        injector = None
+        if spec0.inject_faults:
+            plan = faults_mod.FaultPlan.from_string(
+                spec0.inject_faults, total_steps=total, seed=spec0.seed)
+            injector = faults_mod.FaultInjector(plan,
+                                               ckpt_dir=spec0.ckpt_dir)
+            log.warning("chaos run: injecting faults [%s]", plan.to_string())
+        guard = (StepGuard(budget=spec0.guard_budget)
+                 if spec0.guard == "on" else None)
+        ladder = (degrade_mod.DegradationLadder()
+                  if spec0.degrade == "on" else None)
+        straggler = straggler or StragglerPolicy(
+            factor=spec0.straggler_factor,
+            consecutive_limit=spec0.straggler_limit)
 
         def _log_step(res):
-            if res.step % spec.log_interval == 0:
+            if res.step % spec0.log_interval == 0:
                 log.info("step %5d  loss %.4f  %.3fs/step",
                          res.step, res.loss, res.seconds)
             if on_step:
                 on_step(res)
 
-        params, opt_state, history = run_resilient(
+        def extra_fn():
+            return {"spec": _spec_manifest(self.live_spec)}
+
+        def _sync_iter(loop, state):
+            """Point the loop at an iterator matching the live spec's
+            (seq, batch) positioned at ``state``."""
+            live = self.live_spec
+            if data is None:
+                loop.batch_iter = self.make_data(state=state)
+                return
+            it = loop.batch_iter
+            if state is not None:
+                it.state = state
+            elif loop._initial_data_state is not None:
+                it.state = dataclasses.replace(loop._initial_data_state)
+            if isinstance(it, TokenStream) and (it.seq_len != live.seq
+                                                or it.batch != live.batch):
+                loop.batch_iter = TokenStream(it.tokens, live.seq,
+                                              live.batch, state=it.state)
+
+        def restore_fn(loop):
+            def template_fn(extra):
+                saved = (extra or {}).get("spec")
+                target = (dataclasses.replace(spec0, **saved) if saved
+                          else spec0)
+                self._switch_to(target)
+                return self.init_state()
+
+            try:
+                restored = ckpt.restore_latest(template_fn=template_fn)
+            except IOError as e:
+                # every checkpoint corrupt: restart from step 0 rather
+                # than lose the job (counters record the quarantines)
+                log.error("all checkpoints unrestorable (%s); "
+                          "restarting from scratch", e)
+                restored = None
+            if restored is None:
+                self._switch_to(spec0)
+                params, opt_state = self.init_state()
+                _sync_iter(loop, None)
+                loop.step_fn = self.step_fn
+                return 0, params, opt_state
+            log.info("resuming from step %d (engine=%s batch=%d seq=%d "
+                     "quantize=%s)", restored["step"], self.live_spec.engine,
+                     self.live_spec.batch, self.live_spec.seq,
+                     self.live_spec.quantize)
+            state = (DataState.from_dict(restored["data_state"])
+                     if restored["data_state"] else None)
+            _sync_iter(loop, state)
+            loop.step_fn = self.step_fn
+            return restored["step"], restored["params"], restored["opt_state"]
+
+        def on_oom(loop):
+            if ladder is None:
+                return None
+            live = self.live_spec
+            try:
+                cands = list(ladder.candidates(live))
+            except degrade_mod.LadderExhausted as e:
+                log.error("OOM with no rung left: %s", e)
+                return None
+            for cand, rung in cands:
+                new_it = loop.batch_iter
+                if cand.batch != live.batch or cand.seq != live.seq:
+                    if not isinstance(new_it, TokenStream):
+                        continue    # can't re-window an opaque iterator
+                    new_it = TokenStream(new_it.tokens, cand.seq, cand.batch,
+                                         state=new_it.state)
+                try:
+                    self._switch_to(cand)
+                except Exception as e:
+                    log.debug("rung %s unbuildable: %s", rung, e)
+                    continue
+                params, opt_state = loop.params, loop.opt_state
+                if cand.quantize != live.quantize:
+                    from repro.core.quant import quantize_params
+                    new_params = quantize_params(params, cand.quantize)
+                    opt_state = degrade_mod.carry_opt_state(
+                        opt_state, params, new_params)
+                    params = new_params
+                loop.batch_iter = new_it
+                loop.step_fn = self.step_fn
+                ladder.record(rung)
+                log.warning(
+                    "memory pressure: degraded via %r -> engine=%s batch=%d "
+                    "seq=%d quantize=%s (predicted peak %.0f MB)",
+                    rung, cand.engine, cand.batch, cand.seq, cand.quantize,
+                    degrade_mod.predicted_peak_mb(cand) or float("nan"))
+                return params, opt_state
+            return None
+
+        it = data if data is not None else self.make_data()
+        loop = ResilientLoop(
             self.step_fn, self.init_state, it, ckpt, total,
-            straggler=straggler or StragglerPolicy(factor=10.0),
-            on_step=_log_step)
-        return TrainResult(params=params, opt_state=opt_state,
-                           history=history)
+            max_retries=spec0.max_retries,
+            restart_budget=8,    # supervised straggler restarts per run
+            straggler=straggler, guard=guard, injector=injector,
+            on_step=_log_step, on_oom=on_oom, restore_fn=restore_fn,
+            extra_fn=extra_fn)
+        params, opt_state, history, counters = loop.run()
+        return TrainResult(
+            params=params, opt_state=opt_state, history=history,
+            counters=counters, final_spec=self.live_spec,
+            degradations=list(ladder.applied) if ladder else [])

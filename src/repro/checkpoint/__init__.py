@@ -1,3 +1,4 @@
 from repro.checkpoint.checkpointer import (  # noqa: F401
-    Checkpointer, latest_step, load_checkpoint, save_checkpoint,
+    Checkpointer, latest_step, load_checkpoint, quarantine_checkpoint,
+    save_checkpoint,
 )

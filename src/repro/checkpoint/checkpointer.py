@@ -148,26 +148,84 @@ def load_checkpoint(directory: str, step: int, params_template: Any,
     return params, opt, manifest.get("data_state", {}), manifest.get("extra", {})
 
 
+def quarantine_checkpoint(directory: str, step: int) -> str:
+    """Move a corrupt checkpoint dir out of the restore path by renaming it
+    ``corrupt_step_XXXXXXXX`` (kept on disk for post-mortems; the
+    ``step_``-prefix listing no longer sees it)."""
+    src = os.path.join(directory, f"step_{step:08d}")
+    dst = os.path.join(directory, f"corrupt_step_{step:08d}")
+    if os.path.exists(dst):
+        shutil.rmtree(dst)
+    os.rename(src, dst)
+    return dst
+
+
 class Checkpointer:
-    """Convenience wrapper bundling directory + interval + auto-resume."""
+    """Convenience wrapper bundling directory + interval + auto-resume.
+
+    ``restore_latest`` survives corruption: a checkpoint that fails checksum
+    verification (or cannot be loaded at all) is quarantined —
+    renamed ``corrupt_step_*`` and recorded in ``self.quarantined`` — and
+    the next-older checkpoint is tried, so one bad write never loses the
+    run. Only when *every* checkpoint fails does it raise ``IOError``.
+    """
 
     def __init__(self, directory: str, interval: int = 100, keep: int = 3):
         self.directory = directory
         self.interval = interval
         self.keep = keep
+        self.quarantined: list = []   # (step, reason) in quarantine order
 
     def maybe_save(self, step: int, params, opt_state=None, data_state=None,
                    extra=None) -> Optional[str]:
         if step % self.interval != 0:
             return None
+        return self.save(step, params, opt_state, data_state, extra)
+
+    def save(self, step: int, params, opt_state=None, data_state=None,
+             extra=None) -> str:
+        """Unconditional (interval-ignoring) save — the resilient loop uses
+        this for the forced final checkpoint and post-degradation saves."""
         return save_checkpoint(self.directory, step, params, opt_state,
                                data_state, extra, keep=self.keep)
 
-    def restore_latest(self, params_template, opt_template=None, **kw):
-        step = latest_step(self.directory)
-        if step is None:
+    def read_manifest(self, step: int) -> dict:
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)
+
+    def restore_latest(self, params_template=None, opt_template=None, *,
+                       template_fn=None, **kw):
+        """Restore the newest valid checkpoint, falling back over corrupt
+        ones (quarantining each). ``template_fn(extra) -> (params_template,
+        opt_template)`` lets the caller build templates per candidate from
+        its recorded manifest ``extra`` (the Trainer reconstitutes the
+        degraded TrainSpec this way); otherwise the given templates apply
+        to every candidate."""
+        steps = sorted(_list_steps(self.directory), reverse=True) \
+            if os.path.isdir(self.directory) else []
+        if not steps:
             return None
-        params, opt, data_state, extra = load_checkpoint(
-            self.directory, step, params_template, opt_template, **kw)
-        return {"step": step, "params": params, "opt_state": opt,
-                "data_state": data_state, "extra": extra}
+        for step in steps:
+            try:
+                if template_fn is not None:
+                    manifest = self.read_manifest(step)
+                    pt, ot = template_fn(manifest.get("extra", {}))
+                else:
+                    pt, ot = params_template, opt_template
+                params, opt, data_state, extra = load_checkpoint(
+                    self.directory, step, pt, ot, **kw)
+                return {"step": step, "params": params, "opt_state": opt,
+                        "data_state": data_state, "extra": extra}
+            except (IOError, OSError, KeyError, ValueError,
+                    json.JSONDecodeError) as e:
+                quarantine_checkpoint(self.directory, step)
+                self.quarantined.append((step, str(e)))
+                import logging
+                logging.getLogger("repro.ckpt").warning(
+                    "checkpoint step %d failed verification (%s); "
+                    "quarantined, falling back to next-older", step, e)
+        raise IOError(
+            f"no restorable checkpoint in {self.directory}: all "
+            f"{len(steps)} candidates failed verification and were "
+            f"quarantined ({[s for s, _ in self.quarantined]})")

@@ -37,6 +37,16 @@ def main(argv=None):
     result = trainer.fit()
     log.info("done: final loss %.4f over %d steps",
              result.final_loss, len(result.history))
+    counts = result.fault_counts
+    if result.counters is not None and result.counters.total_faults:
+        log.info("faults survived: %s", {k: v for k, v in counts.items()
+                                         if v})
+    if result.degradations:
+        fs = result.final_spec
+        log.info("degraded %d time(s) [%s]; final spec: engine=%s batch=%d "
+                 "seq=%d quantize=%s", len(result.degradations),
+                 " -> ".join(result.degradations), fs.engine, fs.batch,
+                 fs.seq, fs.quantize)
     return 0
 
 

@@ -1,1 +1,2 @@
-from repro.runtime import elastic, fault_tolerance  # noqa: F401
+from repro.runtime import (degrade, elastic, fault_tolerance, faults,  # noqa: F401
+                           guard)

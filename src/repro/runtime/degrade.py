@@ -1,0 +1,174 @@
+"""Memory-pressure degradation ladder: keep training when the device shrinks.
+
+On a phone the memory budget is not a constant — the OS reclaims pages as
+other apps wake, and the correct response to ``RESOURCE_EXHAUSTED`` mid-run
+is usually not "retry the identical program" (it will OOM again) but "retry
+a cheaper program". This module walks the :class:`~repro.api.spec.TrainSpec`
+space the engine registry already defines, rung by rung, most-reversible
+first:
+
+1. **halve the batch** (repeats until ``min_batch``) — linear activation
+   savings, zero effect on the per-example gradient;
+2. **engine step-down** — ``mesp_pallas → mesp → mesp_seq`` (the paper's
+   §4.3 sequential loop: per-block immediate updates, the leanest retained
+   set; requires the dense family + SGD, validated before the switch);
+3. **quantize the frozen base to int8** — halves resident W0, LoRA factors
+   and therefore gradients are untouched;
+4. **halve the sequence length** (repeats until ``min_seq``) — last resort,
+   it changes the token windows the run sees.
+
+Every candidate rung is validated twice before it is offered: against the
+registry (``TrainSpec.validate`` — the engine must support the resulting
+quantize combo) and against ``benchmarks/memsim``'s analytical peak — a
+rung that the memory model says does not reduce the predicted footprint is
+skipped. The Trainer applies the first rung that also *builds* (e.g.
+``mesp_seq`` refuses non-SGD optimizers at build time).
+
+Optimizer state carries across compatible transitions:
+batch/seq/engine rungs leave the param tree untouched, so the state carries
+verbatim; the int8 rung rewrites frozen ``w`` leaves into ``{"q","scale"}``
+dicts, and :func:`carry_opt_state` re-maps the state tree by parameter path
+so the trained LoRA moments survive while frozen-slot entries stay ``None``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Iterator, Optional, Tuple
+
+import jax
+
+log = logging.getLogger("repro.degrade")
+
+#: engine step-downs, leanest-retained-set direction
+ENGINE_LADDER = {"mesp_pallas": "mesp", "mesp": "mesp_seq"}
+
+
+class LadderExhausted(RuntimeError):
+    """No rung left: the spec is already at the floor of the ladder."""
+
+
+def _import_memsim():
+    """``benchmarks/`` lives at the repo root (a namespace package next to
+    ``src/``), so it is importable when launched from the repo but not from
+    an arbitrary cwd — fall back to the root inferred from this file."""
+    try:
+        from benchmarks import memsim
+        return memsim
+    except ImportError:
+        import os
+        import sys
+        here = os.path.abspath(__file__)   # <root>/src/repro/runtime/...
+        root = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(here))))
+        if not os.path.isdir(os.path.join(root, "benchmarks")):
+            raise
+        sys.path.insert(0, root)
+        try:
+            from benchmarks import memsim
+            return memsim
+        finally:
+            sys.path.remove(root)
+
+
+def predicted_peak_mb(spec) -> Optional[float]:
+    """Analytical peak (MB) for a spec via ``benchmarks/memsim``'s retention
+    models. None when memsim (or the arch entry) is unavailable — callers
+    treat that as "cannot validate", not as an error, so the ladder still
+    functions in stripped deployments."""
+    try:
+        memsim = _import_memsim()
+    except ImportError:
+        return None
+    try:
+        fmt = "int8" if spec.quantize == "int8" else "bf16"
+        b = memsim.simulate(spec.arch, spec.engine, spec.seq,
+                            batch=spec.batch, weights_fmt=fmt)
+        return b.total_mb
+    except Exception as e:  # unknown arch / engine without memsim hook
+        log.debug("memsim validation unavailable for %s: %s", spec.engine, e)
+        return None
+
+
+def _flatten_paths(tree) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: x is None)[0]
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+def carry_opt_state(opt_state, old_params, new_params):
+    """Re-map an optimizer state dict onto a transformed param tree.
+
+    Scalars (``step``) copy through; tree-valued entries (momentum ``m``,
+    Adam ``m``/``v``) are rebuilt on ``new_params``'s structure with each
+    leaf taken from the same parameter path in the old tree, or ``None``
+    where the path is new (e.g. the ``{"q","scale"}`` leaves the int8 rung
+    introduces — frozen slots carry no state anyway)."""
+    if not isinstance(opt_state, dict):
+        return opt_state
+    out = {}
+    for key, val in opt_state.items():
+        if not isinstance(val, (dict, list, tuple)):
+            out[key] = val
+            continue
+        old = _flatten_paths(val)
+        out[key] = jax.tree_util.tree_map_with_path(
+            lambda path, _leaf: old.get(jax.tree_util.keystr(path)),
+            new_params)
+    return out
+
+
+class DegradationLadder:
+    """Yields validated degraded specs for a spec under memory pressure."""
+
+    def __init__(self, *, min_batch: int = 1, min_seq: int = 32,
+                 require_memsim_improvement: bool = True):
+        self.min_batch = min_batch
+        self.min_seq = min_seq
+        self.require_memsim_improvement = require_memsim_improvement
+        self.applied: list = []     # rung names, in application order
+
+    # ------------------------------------------------------------ raw rungs
+    def _raw_candidates(self, spec) -> Iterator[Tuple[object, str]]:
+        if spec.batch > self.min_batch:
+            yield (dataclasses.replace(spec, batch=spec.batch // 2),
+                   "halve_batch")
+        nxt = ENGINE_LADDER.get(spec.engine)
+        if nxt is not None:
+            yield dataclasses.replace(spec, engine=nxt), f"engine_{nxt}"
+        if spec.quantize == "none":
+            yield (dataclasses.replace(spec, quantize="int8"),
+                   "quantize_int8")
+        if spec.seq > self.min_seq:
+            yield (dataclasses.replace(spec, seq=max(self.min_seq,
+                                                     spec.seq // 2)),
+                   "truncate_seq")
+
+    # ------------------------------------------------------------ validated
+    def candidates(self, spec) -> Iterator[Tuple[object, str]]:
+        """Registry- and memsim-validated rungs, in ladder order. The caller
+        (Trainer) applies the first one whose step also builds."""
+        base_peak = predicted_peak_mb(spec)
+        any_yielded = False
+        for cand, rung in self._raw_candidates(spec):
+            try:
+                cand.validate()
+            except Exception as e:
+                log.debug("rung %s rejected by registry: %s", rung, e)
+                continue
+            peak = predicted_peak_mb(cand)
+            if (self.require_memsim_improvement and base_peak is not None
+                    and peak is not None and peak > base_peak + 1e-6):
+                log.debug("rung %s rejected by memsim: %.1f MB > %.1f MB",
+                          rung, peak, base_peak)
+                continue
+            any_yielded = True
+            yield cand, rung
+        if not any_yielded:
+            raise LadderExhausted(
+                f"degradation ladder exhausted at engine={spec.engine!r} "
+                f"batch={spec.batch} seq={spec.seq} "
+                f"quantize={spec.quantize!r}")
+
+    def record(self, rung: str) -> None:
+        self.applied.append(rung)

@@ -1,24 +1,38 @@
-"""Fault tolerance runtime: restartable training driver + straggler policy.
+"""Fault-tolerant runtime: the supervised ResilientLoop + straggler policy.
 
-At 1000+ node scale the failure model is: (a) whole-job preemption/crash —
-handled by atomic checkpoints + auto-resume; (b) single-node hangs /
-stragglers — handled by a per-step watchdog that skips the step and raises a
-restart signal after ``max_step_time`` (on real multi-host TPU this pairs
-with the platform's slice-rescheduling; here the policy layer is exercised by
-injected-failure tests); (c) data-loss on restart — prevented by checkpointing
-the data-iterator state.
+On-device (and at 1000+ node scale) the failure model is: (a) whole-job
+preemption/crash — handled by atomic checkpoints + auto-resume; (b) memory
+pressure / ``RESOURCE_EXHAUSTED`` — handled by the degradation ladder
+(``runtime/degrade.py``) before falling back to retry; (c) numerical
+anomalies (NaN loss, gradient spikes) — handled by the step guard
+(``runtime/guard.py``) with a bounded skip-and-rewind budget; (d) hangs /
+stragglers — a per-step watchdog whose ``restart`` verdict triggers a
+supervised restore-from-checkpoint (bounded by ``restart_budget``);
+(e) data-loss on restart — prevented by checkpointing the data-iterator
+state.
 
-``run_resilient`` is the generic driver used by launch/train.py and the
-fault-injection tests.
+:class:`ResilientLoop` is the supervisor: it owns the step/retry state
+machine, classifies failures (OOM vs transient), applies exponential
+backoff, **resets the retry budget after every successful step** (one
+transient early plus another much later must not kill a long run), counts
+every fault into :class:`FaultCounters`, and always force-saves a final
+checkpoint on exit so a completed run is resumable/servable even when
+``total_steps % interval != 0``.
+
+``run_resilient`` remains as the thin functional wrapper used by older
+call sites and tests; it runs the same loop with ``restart_budget=0``
+(straggler restarts raise, the historical contract).
 """
 from __future__ import annotations
 
+import dataclasses
 import logging
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 from repro.checkpoint import Checkpointer
+from repro.runtime.faults import is_oom_error
 
 log = logging.getLogger("repro.ft")
 
@@ -31,24 +45,61 @@ class StepResult:
     retried: bool = False
 
 
+@dataclass
+class FaultCounters:
+    """Per-fault accounting surfaced in ``TrainResult`` and the chaos
+    benchmark's ``BENCH_resilience.json``."""
+    step_failures: int = 0        # generic exceptions (incl. crashes)
+    oom_events: int = 0           # RESOURCE_EXHAUSTED-class failures
+    degradations: int = 0         # ladder rungs applied
+    guard_skips: int = 0          # anomalous steps rejected + rewound
+    straggler_restarts: int = 0   # watchdog-triggered supervised restarts
+    ckpt_quarantines: int = 0     # corrupt checkpoints quarantined
+    steps_replayed: int = 0       # steps re-run after restore rewinds
+    backoff_seconds: float = 0.0  # total time spent backing off
+    injected: dict = field(default_factory=dict)  # {kind: fired} from plan
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @property
+    def total_faults(self) -> int:
+        return (self.step_failures + self.oom_events + self.guard_skips
+                + self.straggler_restarts)
+
+
 class StragglerPolicy:
     """EWMA step-time tracker; flags steps slower than ``factor``× the mean.
 
-    On real hardware a flagged step triggers (1) collective-timeout logging,
-    (2) optional step skip for async-capable optimizers, (3) a restart signal
-    if ``consecutive_limit`` is exceeded (the node is presumed sick).
+    The first ``warmup`` observations are discarded from the baseline (the
+    jit-compile step would otherwise seed the EWMA with a wildly unhistoric
+    mean). On real hardware a flagged step triggers (1) collective-timeout
+    logging, (2) optional step skip for async-capable optimizers, (3) a
+    restart signal if ``consecutive_limit`` is exceeded (the node is
+    presumed sick).
     """
 
     def __init__(self, factor: float = 3.0, consecutive_limit: int = 3,
-                 alpha: float = 0.1):
+                 alpha: float = 0.1, warmup: int = 1):
         self.factor = factor
         self.limit = consecutive_limit
         self.alpha = alpha
+        self.warmup = warmup
+        self._seen = 0
         self.mean: Optional[float] = None
+        self.slow_streak = 0
+
+    def reset(self) -> None:
+        """Re-seed the baseline (after a restart or a re-jitted step)."""
+        self._seen = 0
+        self.mean = None
         self.slow_streak = 0
 
     def observe(self, seconds: float) -> str:
         """Returns 'ok' | 'slow' | 'restart'."""
+        self._seen += 1
+        if self._seen <= self.warmup:
+            return "ok"                      # compile step: not a baseline
         if self.mean is None:
             self.mean = seconds
             return "ok"
@@ -68,6 +119,221 @@ class RestartRequired(RuntimeError):
     pass
 
 
+class ResilientLoop:
+    """Supervised training-step driver.
+
+    step_fn(params, opt_state, batch) -> (params, opt_state, loss)
+    init_state() -> (params, opt_state)
+
+    Pluggable hooks (all optional) let the Trainer facade wire in the full
+    resilience stack without this module importing any of it eagerly:
+
+    * ``injector``   — :class:`~repro.runtime.faults.FaultInjector`; its
+      ``before_step`` runs inside the try block (raising kinds land in the
+      failure handler) and ``after_step`` may replace the loss.
+    * ``guard``      — :class:`~repro.runtime.guard.StepGuard`; a ``reject``
+      verdict rewinds the step (new params/opt-state discarded, batch
+      skipped).
+    * ``on_oom(loop)`` — degradation hook. May swap ``loop.step_fn`` /
+      ``loop.batch_iter`` and return transformed ``(params, opt_state)`` to
+      retry the same step under a cheaper spec; ``None`` falls through to
+      the ordinary retry path.
+    * ``restore_fn(loop)`` — replaces the default restore (the Trainer uses
+      this to rebuild engine/iterator from the spec recorded in the
+      checkpoint manifest). Must return ``(step, params, opt_state)`` and
+      update ``loop.batch_iter``/``loop.step_fn`` as needed.
+    * ``extra_fn()`` — dict merged into every checkpoint manifest (the
+      Trainer records the live spec so restores are self-describing).
+    """
+
+    def __init__(self, step_fn: Callable[[Any, Any, dict], tuple],
+                 init_state: Callable[[], tuple],
+                 batch_iter,
+                 ckpt: Checkpointer,
+                 total_steps: int,
+                 *,
+                 max_retries: int = 3,
+                 restart_budget: int = 0,
+                 backoff_base: float = 0.05,
+                 backoff_max: float = 30.0,
+                 straggler: Optional[StragglerPolicy] = None,
+                 guard=None,
+                 injector=None,
+                 on_step: Optional[Callable[[StepResult], None]] = None,
+                 on_oom: Optional[Callable] = None,
+                 restore_fn: Optional[Callable] = None,
+                 extra_fn: Optional[Callable[[], dict]] = None):
+        self.step_fn = step_fn
+        self.init_state = init_state
+        self.batch_iter = batch_iter
+        self.ckpt = ckpt
+        self.total_steps = total_steps
+        self.max_retries = max_retries
+        self.restart_budget = restart_budget
+        self.backoff_base = backoff_base
+        self.backoff_max = backoff_max
+        self.straggler = straggler or StragglerPolicy()
+        self.guard = guard
+        self.injector = injector
+        self.on_step = on_step
+        self.on_oom = on_oom
+        self.restore_fn = restore_fn
+        self.extra_fn = extra_fn
+
+        self.counters = FaultCounters()
+        self.step = 0
+        self.params = None
+        self.opt_state = None
+        self._consecutive_failures = 0
+        self._last_saved: Optional[int] = None
+        # snapshot of the iterator's initial position so a restore with no
+        # checkpoint replays the exact token stream from the start
+        state = getattr(batch_iter, "state", None)
+        self._initial_data_state = (dataclasses.replace(state)
+                                    if dataclasses.is_dataclass(state)
+                                    else None)
+
+    # -------------------------------------------------------------- restore
+    def _data_state_dict(self) -> Optional[dict]:
+        state = getattr(self.batch_iter, "state", None)
+        return state.to_dict() if state is not None else None
+
+    def _restore(self):
+        self.straggler.reset()
+        if self.restore_fn is not None:
+            step, params, opt_state = self.restore_fn(self)
+        else:
+            params, opt_state = self.init_state()
+            restored = self.ckpt.restore_latest(params, opt_state)
+            if restored is not None:
+                log.info("resuming from step %d", restored["step"])
+                if restored["data_state"]:
+                    self.batch_iter.state = type(
+                        self.batch_iter.state).from_dict(
+                        restored["data_state"])
+                step, params, opt_state = (restored["step"],
+                                           restored["params"],
+                                           restored["opt_state"])
+            else:
+                step = 0
+                if self._initial_data_state is not None:
+                    self.batch_iter.state = dataclasses.replace(
+                        self._initial_data_state)
+        if step < self.step:
+            self.counters.steps_replayed += self.step - step
+        self.counters.ckpt_quarantines = len(
+            getattr(self.ckpt, "quarantined", ()))
+        return step, params, opt_state
+
+    # ----------------------------------------------------------------- save
+    def _save_now(self) -> None:
+        self.ckpt.save(self.step, self.params, self.opt_state,
+                       data_state=self._data_state_dict(),
+                       extra=self.extra_fn() if self.extra_fn else None)
+        self._last_saved = self.step
+
+    # -------------------------------------------------------------- failure
+    def _handle_failure(self, e: BaseException) -> None:
+        if is_oom_error(e):
+            self.counters.oom_events += 1
+            log.warning("step %d hit memory pressure: %s", self.step, e)
+            if self.on_oom is not None:
+                swapped = self.on_oom(self)
+                if swapped is not None:
+                    self.params, self.opt_state = swapped
+                    self.counters.degradations += 1
+                    self.straggler.reset()   # next step re-jits: not slow
+                    # checkpoint the degraded state immediately so any later
+                    # restore reconstitutes the post-degradation program
+                    self._save_now()
+                    return
+        else:
+            self.counters.step_failures += 1
+        self._consecutive_failures += 1
+        log.warning("step %d failed (%s); retry %d/%d from checkpoint",
+                    self.step, e, self._consecutive_failures,
+                    self.max_retries)
+        if self._consecutive_failures > self.max_retries:
+            raise
+        delay = min(self.backoff_max,
+                    self.backoff_base * (2 ** (self._consecutive_failures
+                                               - 1)))
+        if delay > 0:
+            self.counters.backoff_seconds += delay
+            time.sleep(delay)
+        self.step, self.params, self.opt_state = self._restore()
+
+    # ------------------------------------------------------------------ run
+    def run(self):
+        from repro.runtime.guard import update_norm as _update_norm
+
+        self.step, self.params, self.opt_state = self._restore()
+        results = []
+        while self.step < self.total_steps:
+            t0 = time.monotonic()
+            try:
+                if self.injector is not None:
+                    self.injector.before_step(self.step)
+                batch = next(self.batch_iter)
+                new_params, new_opt, loss = self.step_fn(
+                    self.params, self.opt_state, batch)
+                if self.injector is not None:
+                    loss = self.injector.after_step(self.step, loss)
+                lossf = float(loss)
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception as e:
+                self._handle_failure(e)
+                continue
+            if self.guard is not None:
+                unorm = (_update_norm(self.params, new_params)
+                         if self.guard.track_update_norm else None)
+                if self.guard.observe(lossf, update_norm=unorm) == "reject":
+                    self.counters.guard_skips += 1
+                    continue      # rewind: update discarded, batch skipped
+            dt = time.monotonic() - t0
+            verdict = self.straggler.observe(dt)
+            if verdict == "restart":
+                self.counters.straggler_restarts += 1
+                if self.counters.straggler_restarts > self.restart_budget:
+                    raise RestartRequired(
+                        f"step {self.step}: {dt:.1f}s >= "
+                        f"{self.straggler.factor}x EWMA for "
+                        f"{self.straggler.limit} consecutive steps")
+                log.warning("straggler watchdog: supervised restart %d/%d "
+                            "at step %d (%.1fs step)",
+                            self.counters.straggler_restarts,
+                            self.restart_budget, self.step, dt)
+                self.step, self.params, self.opt_state = self._restore()
+                continue
+            elif verdict == "slow":
+                log.warning("step %d slow: %.2fs vs EWMA %.2fs",
+                            self.step, dt, self.straggler.mean or 0.0)
+            self.params, self.opt_state = new_params, new_opt
+            self._consecutive_failures = 0    # budget resets on success
+            self.step += 1
+            res = StepResult(self.step, lossf, dt,
+                             retried=self.counters.total_faults > 0)
+            results.append(res)
+            if self.on_step:
+                self.on_step(res)
+            saved = self.ckpt.maybe_save(
+                self.step, self.params, self.opt_state,
+                data_state=self._data_state_dict(),
+                extra=self.extra_fn() if self.extra_fn else None)
+            if saved:
+                self._last_saved = self.step
+        # forced final save: a completed run is always resumable/servable
+        # from its last step, even when total_steps % interval != 0
+        if self.step > 0 and self._last_saved != self.step:
+            self._save_now()
+        if self.injector is not None:
+            self.counters.injected = self.injector.summary()
+        self.counters.ckpt_quarantines = len(
+            getattr(self.ckpt, "quarantined", ()))
+        return self.params, self.opt_state, results, self.counters
+
+
 def run_resilient(step_fn: Callable[[Any, Any, dict], tuple],
                   init_state: Callable[[], tuple],
                   batch_iter,
@@ -77,55 +343,14 @@ def run_resilient(step_fn: Callable[[Any, Any, dict], tuple],
                   max_retries: int = 3,
                   straggler: Optional[StragglerPolicy] = None,
                   on_step: Optional[Callable[[StepResult], None]] = None):
-    """Run ``total_steps`` of ``step_fn``, resuming from the latest checkpoint.
+    """Functional wrapper over :class:`ResilientLoop` (historical API).
 
-    step_fn(params, opt_state, batch) -> (params, opt_state, loss)
-    init_state() -> (params, opt_state)
-
-    Transient step failures (raised exceptions) are retried up to
-    ``max_retries`` from the last checkpoint — the injected-failure test
-    exercises this path end-to-end.
+    Keeps the original contract: straggler ``restart`` verdicts raise
+    :class:`RestartRequired` (``restart_budget=0``) and the return value is
+    ``(params, opt_state, results)`` without counters.
     """
-    straggler = straggler or StragglerPolicy()
-    retries = 0
-
-    def _restore():
-        params, opt_state = init_state()
-        restored = ckpt.restore_latest(params, opt_state)
-        if restored is not None:
-            log.info("resuming from step %d", restored["step"])
-            if restored["data_state"]:
-                batch_iter.state = type(batch_iter.state).from_dict(
-                    restored["data_state"])
-            return restored["step"], restored["params"], restored["opt_state"]
-        return 0, params, opt_state
-
-    step, params, opt_state = _restore()
-    results = []
-    while step < total_steps:
-        batch = next(batch_iter)
-        t0 = time.monotonic()
-        try:
-            params, opt_state, loss = step_fn(params, opt_state, batch)
-        except Exception as e:  # injected failure / device error
-            retries += 1
-            log.warning("step %d failed (%s); retry %d/%d from checkpoint",
-                        step, e, retries, max_retries)
-            if retries > max_retries:
-                raise
-            step, params, opt_state = _restore()
-            continue
-        dt = time.monotonic() - t0
-        verdict = straggler.observe(dt)
-        if verdict == "restart":
-            raise RestartRequired(
-                f"step {step}: {dt:.1f}s ≥ {straggler.factor}× EWMA "
-                f"for {straggler.limit} consecutive steps")
-        step += 1
-        res = StepResult(step, float(loss), dt, retried=retries > 0)
-        results.append(res)
-        if on_step:
-            on_step(res)
-        ckpt.maybe_save(step, params, opt_state,
-                        data_state=batch_iter.state.to_dict())
+    loop = ResilientLoop(step_fn, init_state, batch_iter, ckpt, total_steps,
+                         max_retries=max_retries, restart_budget=0,
+                         straggler=straggler, on_step=on_step)
+    params, opt_state, results, _ = loop.run()
     return params, opt_state, results

@@ -1,0 +1,110 @@
+"""Anomaly-guarded steps: NaN/Inf-loss and update-norm-spike rejection.
+
+On-device runs hit numerical blowups (a bad batch, a race with the
+platform's power management downclocking mid-reduction) that a server fleet
+would catch in aggregate dashboards. Here the defence is local: every step's
+loss (and optionally the parameter-update norm, which for SGD is
+``lr·‖grad‖``) is checked *before* the update is committed. An anomalous
+step is rewound — the freshly computed params/opt-state are discarded, the
+batch is skipped — and the run continues on the next batch.
+
+The budget is bounded: more than ``budget`` rejected steps per run raises
+:class:`GuardExhausted`, because a model that keeps producing NaNs is
+diverged, not unlucky, and silently skipping forever would burn the
+device's energy budget on garbage.
+"""
+from __future__ import annotations
+
+import logging
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+log = logging.getLogger("repro.guard")
+
+
+class GuardExhausted(RuntimeError):
+    """Raised when a run rejects more steps than its guard budget allows."""
+
+
+def update_norm(old_params, new_params) -> float:
+    """Global L2 norm of the parameter update over float leaves (LoRA
+    factors; frozen int8 leaves are unchanged and skipped)."""
+    total = 0.0
+    for a, b in zip(jax.tree_util.tree_leaves(old_params),
+                    jax.tree_util.tree_leaves(new_params)):
+        if not jnp.issubdtype(jnp.asarray(a).dtype, jnp.inexact):
+            continue
+        d = (jnp.asarray(b, jnp.float32) - jnp.asarray(a, jnp.float32))
+        total += float(jnp.sum(d * d))
+    return math.sqrt(total)
+
+
+class StepGuard:
+    """Accept/reject verdicts over a run's step stream.
+
+    * non-finite loss → reject, always;
+    * loss > ``spike_factor`` × EWMA(loss) after ``warmup`` accepted
+      steps → reject;
+    * update_norm > ``spike_factor`` × EWMA(norm) after ``warmup``
+      accepted steps → reject (the grad-norm-spike guard; the loop passes
+      the norm only when ``track_update_norm`` is set).
+
+    Rejections consume a bounded ``budget``; exceeding it raises
+    :class:`GuardExhausted`. EWMAs update on accepted steps only, so an
+    anomaly never poisons its own baseline.
+    """
+
+    def __init__(self, budget: int = 8, spike_factor: float = 25.0,
+                 alpha: float = 0.2, warmup: int = 8,
+                 track_update_norm: bool = True):
+        self.budget = budget
+        self.spike_factor = spike_factor
+        self.alpha = alpha
+        self.warmup = warmup
+        self.track_update_norm = track_update_norm
+        self.rejected = 0
+        self._accepted = 0
+        self._loss_ewma: Optional[float] = None
+        self._norm_ewma: Optional[float] = None
+
+    def _reject(self, reason: str) -> str:
+        self.rejected += 1
+        log.warning("step guard: rejecting step (%s), %d/%d budget used",
+                    reason, self.rejected, self.budget)
+        if self.rejected > self.budget:
+            raise GuardExhausted(
+                f"step guard budget exhausted: {self.rejected} anomalous "
+                f"steps rejected (budget {self.budget}); last: {reason}")
+        return "reject"
+
+    def observe(self, loss: float, update_norm: Optional[float] = None) -> str:
+        """Returns ``"accept"`` or ``"reject"``; raises on exhausted budget."""
+        if not math.isfinite(loss):
+            return self._reject(f"non-finite loss {loss}")
+        if update_norm is not None and not math.isfinite(update_norm):
+            return self._reject(f"non-finite update norm {update_norm}")
+        warmed = self._accepted >= self.warmup
+        if (warmed and self._loss_ewma is not None
+                and loss > self.spike_factor * self._loss_ewma):
+            return self._reject(
+                f"loss spike {loss:.4g} > {self.spike_factor:g}x EWMA "
+                f"{self._loss_ewma:.4g}")
+        if (warmed and update_norm is not None
+                and self._norm_ewma is not None and self._norm_ewma > 0
+                and update_norm > self.spike_factor * self._norm_ewma):
+            return self._reject(
+                f"update-norm spike {update_norm:.4g} > "
+                f"{self.spike_factor:g}x EWMA {self._norm_ewma:.4g}")
+        # accepted: fold into the baselines
+        self._accepted += 1
+        a = self.alpha
+        self._loss_ewma = (loss if self._loss_ewma is None
+                           else (1 - a) * self._loss_ewma + a * loss)
+        if update_norm is not None:
+            self._norm_ewma = (update_norm if self._norm_ewma is None
+                               else (1 - a) * self._norm_ewma
+                               + a * update_norm)
+        return "accept"

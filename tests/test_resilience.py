@@ -1,0 +1,360 @@
+"""Chaos-hardening tests: fault injection, degradation ladder, step guard,
+checkpoint quarantine/fallback, and the supervised ResilientLoop — unit
+level plus a fault-injection matrix through the ``Trainer.fit`` facade."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Trainer, TrainSpec
+from repro.checkpoint import Checkpointer, save_checkpoint
+from repro.data import make_batch_iterator
+from repro.runtime.degrade import (DegradationLadder, LadderExhausted,
+                                   carry_opt_state, predicted_peak_mb)
+from repro.runtime.fault_tolerance import (ResilientLoop, StragglerPolicy,
+                                           run_resilient)
+from repro.runtime.faults import (FaultInjector, FaultPlan, InjectedOOM,
+                                  corrupt_latest_checkpoint, is_oom_error)
+from repro.runtime.guard import GuardExhausted, StepGuard
+
+
+# ---------------------------------------------------------------- FaultPlan
+def test_fault_plan_parse_round_trip():
+    text = "oom@4,corrupt@8,crash@9,nan@14,stall@18:1.5"
+    plan = FaultPlan.parse(text)
+    assert len(plan.events) == 5
+    assert plan.to_string() == text
+    assert FaultPlan.parse(plan.to_string()) == plan
+    stall = [e for e in plan.events if e.kind == "stall"][0]
+    assert stall.arg == 1.5
+
+
+def test_fault_plan_same_step_ordering():
+    # corrupt must fire before crash at the same step, or the crash's
+    # restore would never see the poisoned checkpoint
+    plan = FaultPlan.parse("crash@9,corrupt@9")
+    assert [e.kind for e in plan.events] == ["corrupt", "crash"]
+
+
+def test_fault_plan_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="bad fault entry"):
+        FaultPlan.parse("meteor@3")
+
+
+def test_fault_plan_seeded_is_deterministic():
+    a = FaultPlan.seeded(seed=7, total_steps=50)
+    b = FaultPlan.seeded(seed=7, total_steps=50)
+    c = FaultPlan.seeded(seed=8, total_steps=50)
+    assert a == b and a.to_string() == b.to_string()
+    assert a != c
+    assert len(a.events) == 5
+    assert len({e.step for e in a.events}) == 5          # distinct steps
+    assert all(0 < e.step < 50 for e in a.events)
+
+
+def test_fault_plan_from_string_random():
+    plan = FaultPlan.from_string("random:3", total_steps=30, seed=1)
+    assert len(plan.events) == 3
+    assert plan == FaultPlan.from_string("random:3", total_steps=30, seed=1)
+
+
+def test_is_oom_error_classification():
+    assert is_oom_error(InjectedOOM("RESOURCE_EXHAUSTED: boo"))
+    assert is_oom_error(MemoryError())
+    assert is_oom_error(RuntimeError("RESOURCE_EXHAUSTED: hbm"))
+    assert not is_oom_error(RuntimeError("device lost"))
+
+
+def test_injector_fires_each_event_once(tmp_path):
+    inj = FaultInjector(FaultPlan.parse("oom@2"), ckpt_dir=str(tmp_path))
+    inj.before_step(0)
+    with pytest.raises(InjectedOOM):
+        inj.before_step(2)
+    inj.before_step(2)          # a rewound replay must not re-fire it
+    assert inj.summary() == {"oom": 1} and inj.exhausted
+
+
+def test_spec_validates_fault_plan_early():
+    with pytest.raises(ValueError, match="bad fault entry"):
+        TrainSpec(inject_faults="nonsense").validate()
+    TrainSpec(inject_faults="oom@4,nan@7").validate()
+
+
+# ---------------------------------------------------------------- StepGuard
+def test_guard_rejects_nonfinite_and_exhausts_budget():
+    g = StepGuard(budget=2)
+    assert g.observe(1.0) == "accept"
+    assert g.observe(float("nan")) == "reject"
+    assert g.observe(float("inf")) == "reject"
+    with pytest.raises(GuardExhausted):
+        g.observe(float("nan"))
+
+
+def test_guard_rejects_loss_spike_after_warmup():
+    g = StepGuard(budget=4, spike_factor=10.0, warmup=3)
+    for _ in range(3):
+        assert g.observe(1.0) == "accept"
+    assert g.observe(50.0) == "reject"       # 50 > 10 x EWMA(1.0)
+    assert g.observe(1.1) == "accept"        # baseline not poisoned
+    assert g.rejected == 1
+
+
+def test_guard_rejects_update_norm_spike():
+    g = StepGuard(budget=4, spike_factor=10.0, warmup=2)
+    assert g.observe(1.0, update_norm=0.1) == "accept"
+    assert g.observe(1.0, update_norm=0.1) == "accept"
+    assert g.observe(1.0, update_norm=5.0) == "reject"
+
+
+# ---------------------------------------------------------------- straggler
+def test_straggler_warmup_discards_compile_step():
+    # a 100x jit-compile first step must not seed the EWMA baseline
+    sp = StragglerPolicy(factor=3.0, consecutive_limit=2, warmup=1)
+    assert sp.observe(10.0) == "ok"          # compile step, discarded
+    assert sp.observe(0.1) == "ok"           # seeds the baseline
+    assert sp.observe(0.11) == "ok"
+    assert sp.observe(1.0) == "slow"
+    sp.reset()
+    assert sp.observe(10.0) == "ok" and sp.mean is None
+
+
+# ------------------------------------------------- ladder + opt-state carry
+def test_ladder_walks_validated_rungs():
+    spec = TrainSpec(engine="mesp_pallas", batch=4, seq=256)
+    rungs = dict((r, c) for c, r in DegradationLadder().candidates(spec))
+    assert rungs["halve_batch"].batch == 2
+    assert rungs["engine_mesp"].engine == "mesp"
+    assert rungs["quantize_int8"].quantize == "int8"
+    assert rungs["truncate_seq"].seq == 128
+    base = predicted_peak_mb(spec)
+    if base is not None:     # memsim present: every rung must not grow peak
+        for cand in rungs.values():
+            assert predicted_peak_mb(cand) <= base + 1e-6
+
+
+def test_ladder_exhausts_at_floor():
+    spec = TrainSpec(engine="mesp_seq", batch=1, seq=32, quantize="int8")
+    with pytest.raises(LadderExhausted):
+        list(DegradationLadder(min_batch=1, min_seq=32).candidates(spec))
+
+
+def test_carry_opt_state_across_int8_rewrite():
+    from repro.core.quant import quantize_params
+
+    params = {"blk": {"w": jnp.ones((4, 4)), "a": jnp.ones((4, 2)),
+                      "b": jnp.zeros((2, 4))}}
+    mom = jax.tree_util.tree_map(lambda x: x * 2.0, params)
+    opt_state = {"step": jnp.array(3, jnp.int32), "m": mom}
+    qp = quantize_params(params, "int8")
+    out = carry_opt_state(opt_state, params, qp)
+    assert int(out["step"]) == 3
+    # LoRA moments carried verbatim; rewritten frozen slots drop to None
+    np.testing.assert_array_equal(out["m"]["blk"]["a"], mom["blk"]["a"])
+    np.testing.assert_array_equal(out["m"]["blk"]["b"], mom["blk"]["b"])
+    assert out["m"]["blk"]["w"]["q"] is None
+    assert out["m"]["blk"]["w"]["scale"] is None
+
+
+# ------------------------------------------------------- loop satellites
+def _counting_loop(tmp_path, fail_calls, total_steps=8, max_retries=1,
+                   interval=2):
+    it = make_batch_iterator(50, 4, 2, n_tokens=2048)
+    ckpt = Checkpointer(str(tmp_path), interval=interval)
+    calls = {"n": 0}
+
+    def step_fn(params, opt_state, batch):
+        calls["n"] += 1
+        if calls["n"] in fail_calls:
+            raise RuntimeError(f"boom at call {calls['n']}")
+        return params + 1, opt_state, float(params)
+
+    return ResilientLoop(step_fn, lambda: (jnp.array(0.0), None), it, ckpt,
+                         total_steps, max_retries=max_retries,
+                         backoff_base=0.0)
+
+
+def test_retry_budget_resets_after_success(tmp_path):
+    # two failures separated by successes: with max_retries=1 both must be
+    # absorbed (the old accounting never reset and killed the run)
+    loop = _counting_loop(tmp_path, fail_calls={3, 8}, max_retries=1)
+    params, _, results, counters = loop.run()
+    assert results[-1].step == 8
+    assert counters.step_failures == 2
+    assert float(params) == 8.0
+
+
+def test_consecutive_failures_still_raise(tmp_path):
+    loop = _counting_loop(tmp_path, fail_calls={3, 4, 5}, max_retries=2)
+    with pytest.raises(RuntimeError, match="boom"):
+        loop.run()
+
+
+def test_forced_final_checkpoint_on_exit(tmp_path):
+    # total_steps % interval != 0: the loop must still leave a final
+    # checkpoint at the last step
+    loop = _counting_loop(tmp_path, fail_calls=set(), total_steps=7,
+                          interval=5)
+    loop.run()
+    from repro.checkpoint import latest_step
+    assert latest_step(str(tmp_path)) == 7
+
+
+def test_run_resilient_wrapper_keeps_legacy_contract(tmp_path):
+    it = make_batch_iterator(50, 4, 2, n_tokens=2048)
+    ckpt = Checkpointer(str(tmp_path), interval=100)
+    out = run_resilient(lambda p, o, b: (p, o, 0.0),
+                        lambda: (jnp.array(0.0), None), it, ckpt, 2)
+    assert len(out) == 3                     # (params, opt_state, results)
+
+
+# --------------------------------------------- quarantine + fallback restore
+def test_restore_latest_falls_back_over_corrupt_checkpoint(tmp_path):
+    d = str(tmp_path)
+    params = {"w": jnp.arange(4.0)}
+    save_checkpoint(d, 2, params, {"step": jnp.array(2)})
+    save_checkpoint(d, 4, params, {"step": jnp.array(4)})
+    assert corrupt_latest_checkpoint(d) == 4
+    ckpt = Checkpointer(d)
+    restored = ckpt.restore_latest(params, {"step": jnp.array(0)})
+    assert restored["step"] == 2             # fell back past the bad one
+    assert [s for s, _ in ckpt.quarantined] == [4]
+    assert os.path.isdir(os.path.join(d, "corrupt_step_00000004"))
+    assert not os.path.isdir(os.path.join(d, "step_00000004"))
+
+
+def test_restore_latest_raises_only_when_all_corrupt(tmp_path):
+    d = str(tmp_path)
+    params = {"w": jnp.arange(4.0)}
+    save_checkpoint(d, 1, params)
+    corrupt_latest_checkpoint(d)
+    ckpt = Checkpointer(d)
+    with pytest.raises(IOError, match="no restorable checkpoint"):
+        ckpt.restore_latest(params, None)
+    # the bad candidate was quarantined, so a retry sees an empty dir
+    assert ckpt.restore_latest(params, None) is None
+
+
+def test_restore_latest_none_when_empty(tmp_path):
+    assert Checkpointer(str(tmp_path / "nope")).restore_latest({}) is None
+
+
+# ------------------------------------------------- Trainer.fit fault matrix
+def _spec(tmp_path, name, **kw):
+    kw.setdefault("arch", "qwen2.5-0.5b")
+    kw.setdefault("reduced", True)
+    kw.setdefault("engine", "mesp")
+    kw.setdefault("steps", 8)
+    kw.setdefault("seq", 32)
+    kw.setdefault("batch", 2)
+    kw.setdefault("lr", 5e-3)
+    kw.setdefault("ckpt_interval", 3)
+    kw.setdefault("ckpt_dir", str(tmp_path / name))
+    return TrainSpec(**kw)
+
+
+def _leaves(tree):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+def test_crash_resumes_exact_token_stream(tmp_path):
+    """A mid-run crash must restore + replay the identical token stream:
+    final params bit-identical to the fault-free twin."""
+    clean = Trainer.from_spec(_spec(tmp_path, "clean")).fit()
+    crashed = Trainer.from_spec(
+        _spec(tmp_path, "crash", inject_faults="crash@5")).fit()
+    assert crashed.fault_counts["step_failures"] == 1
+    assert crashed.fault_counts["steps_replayed"] > 0
+    for a, b in zip(_leaves(clean.params), _leaves(crashed.params)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_oom_degrades_to_memsim_valid_spec(tmp_path):
+    res = Trainer.from_spec(
+        _spec(tmp_path, "oom", inject_faults="oom@3")).fit()
+    assert res.history[-1].step == 8
+    assert res.fault_counts["oom_events"] == 1
+    assert res.degradations == ["halve_batch"]
+    assert res.final_spec.batch == 1
+    base = predicted_peak_mb(_spec(tmp_path, "oom"))
+    peak = predicted_peak_mb(res.final_spec)
+    if base is not None and peak is not None:
+        assert peak <= base + 1e-6
+    # the degraded spec still round-trips the CLI (it is a real TrainSpec)
+    res.final_spec.validate()
+
+
+def test_oom_with_ladder_off_retries_in_place(tmp_path):
+    res = Trainer.from_spec(
+        _spec(tmp_path, "noladder", inject_faults="oom@3",
+              degrade="off")).fit()
+    assert res.degradations == []
+    assert res.fault_counts["oom_events"] == 1
+    assert res.history[-1].step == 8
+
+
+def test_nan_loss_skipped_and_run_converges(tmp_path):
+    clean = Trainer.from_spec(_spec(tmp_path, "clean2")).fit()
+    res = Trainer.from_spec(
+        _spec(tmp_path, "nan", inject_faults="nan@4")).fit()
+    assert res.fault_counts["guard_skips"] == 1
+    assert np.isfinite(res.final_loss)
+    assert all(np.isfinite(r.loss) for r in res.history)
+    assert abs(res.final_loss - clean.final_loss) < 0.5
+
+
+def test_corrupt_checkpoint_falls_back_through_fit(tmp_path):
+    res = Trainer.from_spec(
+        _spec(tmp_path, "corrupt",
+              inject_faults="corrupt@4,crash@5")).fit()
+    assert res.history[-1].step == 8
+    assert res.fault_counts["ckpt_quarantines"] >= 1
+    assert res.fault_counts["injected"] == {"corrupt": 1, "crash": 1}
+
+
+@pytest.mark.parametrize("engine", ["mesp", "mesp_pallas", "mezo"])
+def test_crash_matrix_across_engines(tmp_path, engine):
+    kw = {"engine": engine}
+    if engine == "mezo":
+        kw["lr"] = 1e-3
+    res = Trainer.from_spec(
+        _spec(tmp_path, f"mx_{engine}", steps=6,
+              inject_faults="crash@4", **kw)).fit()
+    assert res.history[-1].step == 6
+    assert res.fault_counts["injected"] == {"crash": 1}
+    assert np.isfinite(res.final_loss)
+
+
+def test_five_fault_chaos_run_completes(tmp_path):
+    """The acceptance chaos plan: faults at 5 distinct steps, one of every
+    kind, through Trainer.fit — all steps complete, the run ends on a
+    memsim-valid spec, and the final loss lands near the fault-free twin."""
+    plan = "oom@2,corrupt@4,crash@5,nan@8,stall@10:0.6"
+    spec = _spec(tmp_path, "chaos", steps=12, inject_faults=plan,
+                 straggler_factor=8.0, straggler_limit=1)
+    clean = Trainer.from_spec(_spec(tmp_path, "chaos_clean", steps=12)).fit()
+    res = Trainer.from_spec(spec).fit()
+    assert res.history[-1].step == 12
+    assert res.fault_counts["injected"] == {
+        "oom": 1, "corrupt": 1, "crash": 1, "nan": 1, "stall": 1}
+    assert res.fault_counts["straggler_restarts"] == 1
+    assert res.fault_counts["ckpt_quarantines"] >= 1
+    assert res.degradations == ["halve_batch"]
+    peak = predicted_peak_mb(res.final_spec)
+    if peak is not None:
+        base = predicted_peak_mb(spec)
+        assert base is None or peak <= base + 1e-6
+    assert abs(res.final_loss - clean.final_loss) < 0.5
+    # counters all surfaced in the result
+    for key in ("step_failures", "oom_events", "degradations", "guard_skips",
+                "straggler_restarts", "ckpt_quarantines", "steps_replayed",
+                "backoff_seconds", "injected"):
+        assert key in res.fault_counts
+
+
+def test_chaos_cli_round_trip(tmp_path):
+    spec = _spec(tmp_path, "cli", inject_faults="oom@4,nan@7",
+                 straggler_limit=1, guard_budget=4)
+    assert TrainSpec.from_cli_args(spec.to_cli_args()) == spec
