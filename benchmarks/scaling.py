@@ -1,0 +1,106 @@
+"""Scaling-curve benchmark: step time & collective traffic vs device count.
+
+Runs the *same* reduced training program through ``launch/fleet.py`` on
+emulated fleets of 1/2/4/8 CPU devices — one subprocess per count, because
+``--xla_force_host_platform_device_count`` binds when the XLA backend
+initializes — and records, per count:
+
+* median steady-state step time (compile/warm-up step discarded);
+* the compiled program's collective payload bytes by kind
+  (``roofline.analysis.collective_bytes`` over the sharded step's HLO);
+* the analytic gradient-sync floor (``predicted_grad_sync_bytes``).
+
+Emulated devices share one physical CPU, so wall-clock *speedup* is not the
+point; the committed curve (``benchmarks/results/BENCH_scaling.json``)
+pins the shape of the overhead instead, and
+``scripts/check_bench_regression.py --scaling`` gates on efficiency
+collapse — a fleet whose normalized step time blows up vs the baseline
+curve, or whose programs lost their predicted collectives, fails CI.
+
+    PYTHONPATH=src python -m benchmarks.scaling --steps 4 \\
+        --out benchmarks/results/BENCH_scaling.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_COUNTS = (1, 2, 4, 8)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+DEFAULT_OUT = os.path.join(RESULTS_DIR, "BENCH_scaling.json")
+
+
+def spec_for(devices: int, *, batch: int, seq: int, seed: int) -> dict:
+    """The benchmarked TrainSpec per fleet size: model axis of 2 as soon as
+    the fleet can afford one, remaining devices on data."""
+    return {"reduced": True, "engine": "mesp", "optimizer": "sgd_momentum",
+            "batch": batch, "seq": seq, "seed": seed,
+            "model_parallel": 2 if devices >= 2 else 1}
+
+
+def run_curve(counts=DEFAULT_COUNTS, *, steps: int = 4, batch: int = 4,
+              seq: int = 32, seed: int = 7, verbose: bool = True) -> dict:
+    from repro.launch.fleet import run_fleet
+
+    rows = []
+    for n in counts:
+        spec = spec_for(n, batch=batch, seq=seq, seed=seed)
+        train = run_fleet({"task": "train", "spec": spec, "steps": steps},
+                          devices=n)
+        coll = run_fleet({"task": "collectives", "spec": spec}, devices=n)
+        row = {
+            "devices": n,
+            "mesh": train["mesh"],
+            "model_parallel": spec["model_parallel"],
+            "step_time_s": train["step_time_s"],
+            "step_times_s": train["step_times_s"],
+            "final_loss": train["losses"][-1],
+            "collective_bytes": coll["collective_bytes"],
+            "collective_bytes_total": sum(coll["collective_bytes"].values()),
+            "n_trainable": coll["n_trainable"],
+            "predicted_grad_sync_bytes": coll["predicted_grad_sync_bytes"],
+        }
+        rows.append(row)
+        if verbose:
+            print(f"devices={n:2d} mesh={row['mesh'] or '-'} "
+                  f"step={row['step_time_s'] * 1e3:8.1f}ms "
+                  f"coll={row['collective_bytes_total']:>9d}B "
+                  f"grad_sync_floor={row['predicted_grad_sync_bytes']}B")
+            sys.stdout.flush()
+    base = rows[0]["step_time_s"]
+    for row in rows:
+        # overhead of running the same global problem on a larger emulated
+        # fleet (shared CPU: >1 is expected; the gate bounds its growth)
+        row["step_time_vs_1dev"] = row["step_time_s"] / base
+    return {"setting": {"steps": steps, "batch": batch, "seq": seq,
+                        "seed": seed, "arch": "reduced qwen2.5-0.5b",
+                        "engine": "mesp"},
+            "interpret": True,   # emulated CPU fleet, not accelerator perf
+            "rows": rows}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--counts", type=int, nargs="+",
+                    default=list(DEFAULT_COUNTS))
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+
+    doc = run_curve(tuple(args.counts), steps=args.steps, batch=args.batch,
+                    seq=args.seq)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

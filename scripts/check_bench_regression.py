@@ -26,6 +26,12 @@ annotation-only: wall-clock overhead depends on the host, and the smoke
 chaos plan differs from the committed full plan by design. The one hard
 check it *does* make: every fault kind the plan injected must have fired.
 
+``--scaling FRESH.json`` gates a fresh ``benchmarks/scaling.py``
+device-count curve against the committed ``BENCH_scaling.json``: the
+collective-traffic floors (host-independent) are hard checks, the
+normalized step-time curve is bounded with generous slack — only an
+efficiency *collapse* (sharded program gone super-linear) fails CI.
+
     PYTHONPATH=src python -m benchmarks.kernels --steps 2 --out /tmp/f.json
     PYTHONPATH=src python scripts/check_bench_regression.py /tmp/f.json
     PYTHONPATH=src python scripts/check_bench_regression.py \\
@@ -46,6 +52,14 @@ GQ_BASELINE = (Path(__file__).resolve().parent.parent / "benchmarks" /
                "results" / "BENCH_gradient_quality.json")
 RES_BASELINE = (Path(__file__).resolve().parent.parent / "benchmarks" /
                 "results" / "BENCH_resilience.json")
+SCALING_BASELINE = (Path(__file__).resolve().parent.parent / "benchmarks" /
+                    "results" / "BENCH_scaling.json")
+
+#: efficiency-collapse bound for --scaling: a fleet's step time normalized
+#: by its own 1-device row may exceed the committed normalized curve by at
+#: most this factor. Wall-clock on shared CI hosts is noisy, hence the slack
+#: — but a sharded program gone quadratic blows through 3x immediately.
+SCALING_COLLAPSE = 3.0
 
 #: fractional worsening allowed before failing (a schedule is deterministic,
 #: so any change at all is suspicious — 10% leaves room for deliberate
@@ -160,6 +174,59 @@ def annotate_resilience(fresh_doc: dict, base_doc: dict) -> list[str]:
     return errors
 
 
+def check_scaling(fresh_doc: dict, base_doc: dict) -> list[str]:
+    """Gate the device-count scaling curve (``benchmarks/scaling.py``).
+
+    Hard (host-independent) checks:
+      * the fresh curve covers every baseline device count;
+      * every multi-data-shard program still all-reduces at least the
+        analytic gradient-sync floor (its own ``predicted_grad_sync_bytes``)
+        — a program that silently lost its gradient sync is wrong, not fast;
+      * the single-device program has no collectives.
+
+    Efficiency collapse (the only wall-clock gate, with ``SCALING_COLLAPSE``
+    slack): normalized step time (vs the fresh run's own 1-device row) must
+    not exceed the committed normalized curve by more than the slack factor.
+    """
+    errors = []
+    fresh = {r["devices"]: r for r in fresh_doc.get("rows", [])}
+    base = {r["devices"]: r for r in base_doc.get("rows", [])}
+    missing = sorted(set(base) - set(fresh))
+    if missing:
+        return [f"scaling: fresh curve missing device counts {missing}"]
+    for n in sorted(fresh):
+        row = fresh[n]
+        pred = row.get("predicted_grad_sync_bytes", 0)
+        ar = row.get("collective_bytes", {}).get("all-reduce", 0)
+        total = row.get("collective_bytes_total", 0)
+        dp = n // max(row.get("model_parallel", 1), 1)
+        if n == 1 and total != 0:
+            errors.append(f"scaling: 1-device program emits collectives "
+                          f"({total} bytes)")
+        if dp > 1 and ar < pred:
+            errors.append(f"scaling: {n}-device all-reduce {ar}B below the "
+                          f"gradient-sync floor {pred}B — lost collectives?")
+    f1 = fresh.get(1, {}).get("step_time_s")
+    b1 = base.get(1, {}).get("step_time_s")
+    for n in sorted(fresh):
+        if n == 1 or f1 is None or b1 is None or n not in base:
+            continue
+        f_ratio = fresh[n]["step_time_s"] / f1
+        b_ratio = base[n]["step_time_s"] / b1
+        if f_ratio > b_ratio * SCALING_COLLAPSE:
+            errors.append(
+                f"scaling: {n}-device step time {f_ratio:.2f}x of 1-device "
+                f"(baseline {b_ratio:.2f}x; allowed {SCALING_COLLAPSE}x "
+                f"slack) — efficiency collapse")
+        else:
+            print(f"OK: scaling {n}dev normalized step {f_ratio:.2f}x "
+                  f"(baseline {b_ratio:.2f}x)")
+        print(f"   scaling {n}dev: step {fresh[n]['step_time_s'] * 1e3:.1f}ms"
+              f" coll_total {fresh[n].get('collective_bytes_total', 0)}B "
+              f"(baseline {base[n].get('collective_bytes_total', 0)}B)")
+    return errors
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("fresh", nargs="?", default=None,
@@ -174,11 +241,16 @@ def main(argv=None) -> int:
                          "the committed baseline (gated only on every "
                          "planned fault kind having fired)")
     ap.add_argument("--res-baseline", default=str(RES_BASELINE))
+    ap.add_argument("--scaling", default=None, metavar="FRESH_JSON",
+                    help="gate a fresh BENCH_scaling.json against the "
+                         "committed device-count curve (collective floors "
+                         "hard; step-time collapse with slack)")
+    ap.add_argument("--scaling-baseline", default=str(SCALING_BASELINE))
     args = ap.parse_args(argv)
     if args.fresh is None and args.gradquality is None \
-            and args.resilience is None:
+            and args.resilience is None and args.scaling is None:
         ap.error("nothing to do: pass a fresh BENCH_kernels.json, "
-                 "--gradquality, and/or --resilience")
+                 "--gradquality, --resilience, and/or --scaling")
 
     errors = []
     if args.fresh is not None:
@@ -208,6 +280,18 @@ def main(argv=None) -> int:
         for e in res_errors:
             print(f"FAIL: {e}")
         errors += res_errors
+
+    if args.scaling is not None:
+        with open(args.scaling) as f:
+            sc_fresh = json.load(f)
+        with open(args.scaling_baseline) as f:
+            sc_base = json.load(f)
+        sc_errors = check_scaling(sc_fresh, sc_base)
+        for e in sc_errors:
+            print(f"FAIL: {e}")
+        if not sc_errors:
+            print("OK: scaling curve within tolerance of the baseline")
+        errors += sc_errors
 
     return 1 if errors else 0
 

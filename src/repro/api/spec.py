@@ -54,6 +54,8 @@ class TrainSpec:
     max_retries: int = 3           # consecutive step failures before raising
     straggler_factor: float = 10.0  # watchdog: slow = factor x EWMA step time
     straggler_limit: int = 3       # consecutive slow steps before restart
+    # --- sharding: (data, model) mesh over the visible devices ------------
+    model_parallel: int = 1        # model-axis size; data axis = devices/mp
     # --- sharding: not CLI-serializable (PartitionSpec objects); set
     # programmatically by the distributed launchers ------------------------
     act_spec: Any = dataclasses.field(default=None, metadata=_NO_CLI)
@@ -74,6 +76,9 @@ class TrainSpec:
             if getattr(self, name) not in ("on", "off"):
                 raise ValueError(f"--{name} must be 'on' or 'off', "
                                  f"got {getattr(self, name)!r}")
+        if self.model_parallel < 1:
+            raise ValueError(f"--model-parallel must be >= 1, "
+                             f"got {self.model_parallel}")
         if self.inject_faults:
             from repro.runtime.faults import FaultPlan
             # parse errors (unknown kind, bad syntax) surface before compute
@@ -195,4 +200,9 @@ def build_arg_parser() -> argparse.ArgumentParser:
     ap.add_argument("--straggler-limit", type=int, default=d.straggler_limit,
                     help="consecutive slow steps before a supervised "
                          "restart from checkpoint")
+    ap.add_argument("--model-parallel", type=int, default=d.model_parallel,
+                    help="model-axis size of the (data, model) device mesh; "
+                         "the data axis takes the remaining devices. With "
+                         "one visible device (and 1, the default) training "
+                         "is unsharded; see docs/sharding.md")
     return ap

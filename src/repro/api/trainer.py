@@ -68,7 +68,7 @@ class Trainer:
     explicit ArchConfig (used by examples that build custom configs).
     """
 
-    def __init__(self, spec: TrainSpec, *, cfg=None):
+    def __init__(self, spec: TrainSpec, *, cfg=None, mesh=None):
         from repro.configs import get_config
         from repro.optim import make_optimizer
         from repro.optim.schedules import constant
@@ -80,26 +80,143 @@ class Trainer:
                 cfg = cfg.reduced()
         self.cfg = cfg
         self.opt = make_optimizer(spec.optimizer, constant(spec.lr))
+        self.mesh = mesh if mesh is not None else self._auto_mesh(self.spec)
         self._live_spec: Optional[TrainSpec] = None
         self._switch_to(self.spec)
 
     @classmethod
-    def from_spec(cls, spec: TrainSpec, *, cfg=None) -> "Trainer":
-        return cls(spec, cfg=cfg)
+    def from_spec(cls, spec: TrainSpec, *, cfg=None, mesh=None) -> "Trainer":
+        return cls(spec, cfg=cfg, mesh=mesh)
+
+    # -------------------------------------------------------------- sharding
+    @staticmethod
+    def _auto_mesh(spec: TrainSpec):
+        """(data, model) mesh over the visible devices; ``None`` (unsharded,
+        the historical single-device behaviour) with one device and
+        ``model_parallel == 1``."""
+        n = len(jax.devices())
+        if n == 1 and spec.model_parallel == 1:
+            return None
+        from repro.runtime.elastic import make_mesh_from_devices
+        return make_mesh_from_devices(jax.devices(), spec.model_parallel)
+
+    def _with_mesh_act_spec(self, spec: TrainSpec) -> TrainSpec:
+        """Fold the mesh's activation sharding into the spec (Megatron SP on
+        the seq dim only when it divides). Under a Trainer-managed mesh
+        act_spec is *derived* state, recomputed on every switch — a
+        degradation rung that halves the batch or truncates the seq must not
+        carry the old mesh geometry. Engines with a custom regime
+        (``backend is None``, e.g. the ZO family) keep act_spec unset."""
+        if self.mesh is None:
+            return spec
+        if get_engine(spec.engine).backend is None:
+            return spec
+        from repro.launch import sharding as sh
+        msize = self.mesh.shape.get("model", 1)
+        act = sh.activation_spec(
+            self.mesh, spec.batch,
+            seq_on_model=(msize > 1 and spec.seq % msize == 0))
+        return dataclasses.replace(spec, act_spec=act)
+
+    def _state_struct(self, spec: TrainSpec):
+        """(params, opt_state) ShapeDtypeStructs for ``spec`` — no arrays."""
+        from repro.models import model as model_lib
+
+        def init():
+            params = model_lib.init_params(
+                jax.random.PRNGKey(self.spec.seed), self.cfg,
+                quantize=spec.quantize)
+            return params, self.opt.init(params)
+
+        return jax.eval_shape(init)
+
+    def shard_state(self, params, opt_state=None, *, mesh=None):
+        """``device_put`` state onto the mesh's logical PartitionSpecs
+        (placement-only — values are untouched, tested bit-exact). Returns
+        ``params`` or ``(params, opt_state)`` mirroring the arguments."""
+        from repro.launch import sharding as sh
+        from repro.runtime.elastic import reshard_tree
+
+        mesh = mesh if mesh is not None else self.mesh
+        if mesh is None:
+            return params if opt_state is None else (params, opt_state)
+        params = reshard_tree(params, mesh,
+                              sh.param_specs(self.cfg, params, mesh))
+        if opt_state is None:
+            return params
+        opt_state = reshard_tree(opt_state, mesh,
+                                 sh.opt_specs(self.cfg, opt_state, mesh))
+        return params, opt_state
+
+    def resize(self, devices=None, *, model_parallel=None, params=None,
+               opt_state=None):
+        """Elastic resize: rebuild the mesh from the surviving ``devices``
+        (default: all visible), re-jit the live spec's step for it, and —
+        when ``params``/``opt_state`` are passed — reshard them onto the new
+        topology (``runtime.elastic.reshard_tree``; placement-only).
+
+        Returns ``None``, ``params`` or ``(params, opt_state)`` mirroring
+        the state arguments. The optimizer trajectory across a resize is
+        covered by the emulated-fleet suite (tests/multihost/)."""
+        from repro.runtime.elastic import make_mesh_from_devices
+
+        devices = list(devices) if devices is not None else jax.devices()
+        if model_parallel is None:
+            model_parallel = (self.mesh.shape.get("model", 1)
+                              if self.mesh is not None
+                              else self.live_spec.model_parallel)
+        self.mesh = make_mesh_from_devices(devices, model_parallel)
+        live = dataclasses.replace(self.live_spec, act_spec=None)
+        self._live_spec = None    # force a re-jit onto the new mesh
+        self._switch_to(live)
+        if params is None:
+            return None
+        return self.shard_state(params, opt_state)
 
     # ------------------------------------------------------------ live spec
     def _switch_to(self, spec: TrainSpec) -> None:
         """(Re)build engine + jitted step for ``spec``; no-op if unchanged.
         Raises (without changing live state) when the engine refuses the
-        spec — the degradation path uses that to skip unbuildable rungs."""
+        spec — the degradation path uses that to skip unbuildable rungs.
+
+        With a mesh, the step is jitted with explicit in/out shardings
+        (params/opt state on ``launch/sharding.py``'s logical specs, batch
+        on the DP axes, loss replicated) and wrapped to run inside the mesh
+        context so ``with_sharding_constraint``/``mesh_axis_size`` see it."""
+        spec = self._with_mesh_act_spec(spec)
         if spec == self._live_spec:
             return
         spec = spec.validate()
         engine: Engine = get_engine(spec.engine)
         policy = spec.policy()
-        step_fn = jax.jit(engine.build_step(spec, self.cfg, self.opt,
-                                            policy))
+        build = engine.build_step(spec, self.cfg, self.opt, policy)
+        if self.mesh is None:
+            step_fn = jitted = jax.jit(build)
+        else:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.launch import sharding as sh
+
+            mesh = self.mesh
+            pstruct, ostruct = self._state_struct(spec)
+            pshard = sh.named(mesh, sh.param_specs(self.cfg, pstruct, mesh))
+            oshard = sh.named(mesh, sh.opt_specs(self.cfg, ostruct, mesh))
+            bspec = sh.batch_spec(mesh, spec.batch)
+            bdim = bspec[0] if len(bspec) else None
+            # pytree prefix: every batch leaf shards its leading (batch) dim
+            bshard = NamedSharding(mesh, P(bdim))
+            jitted = jax.jit(
+                build, in_shardings=(pshard, oshard, bshard),
+                out_shardings=(pshard, oshard, NamedSharding(mesh, P())))
+
+            def step_fn(params, opt_state, batch, _j=jitted, _m=mesh):
+                with _m:
+                    return _j(params, opt_state, batch)
+
         self.engine, self.policy, self.step_fn = engine, policy, step_fn
+        #: the raw jitted step (no mesh-context wrapper) — ``.lower()`` this
+        #: for compiled-HLO inspection (fleet collective-bytes checks)
+        self._jit_step = jitted
         self._live_spec = spec
 
     @property

@@ -45,9 +45,53 @@ _CACHE: Dict[str, Dict[str, int]] = {}
 CACHE_DIR = os.path.join(os.path.dirname(__file__), "autotune_cache")
 
 
-def _key(op: str, dims: Dict[str, int], dtype) -> str:
+def _active_mesh():
+    """The physical mesh of the enclosing ``with mesh:`` context, or None.
+    Cheap attribute reads — never initializes a backend by itself."""
+    from jax.interpreters import pxla
+    mesh = pxla.thread_resources.env.physical_mesh
+    if mesh is None or not mesh.axis_names or mesh.size <= 1:
+        return None
+    return mesh
+
+
+def _local_dims(dims: Dict[str, int], axis_sizes: Dict[str, int]) -> Dict[str, int]:
+    """Per-shard dims under a mesh: the token-row dim ``M`` (lora/rmsnorm
+    kernels' B·N rows) is split over the data-parallel axes, and the flash
+    seq dims over ``model`` when Megatron-SP divides them. Dims that don't
+    divide stay global (GSPMD keeps them unsplit or pads — the kernel still
+    sees the global block problem). Pure function of its arguments so it is
+    testable without a live mesh."""
+    dp = 1
+    for a in ("pod", "data"):
+        dp *= axis_sizes.get(a, 1)
+    mp = axis_sizes.get("model", 1)
+    out = dict(dims)
+    if dp > 1 and "M" in out and out["M"] % dp == 0:
+        out["M"] = out["M"] // dp
+    for k in ("Nq", "Nk"):
+        if mp > 1 and k in out and out[k] % mp == 0:
+            out[k] = out[k] // mp
+    return out
+
+
+def _key(op: str, dims: Dict[str, int], dtype, mesh=None) -> str:
+    """Cache key: ``op|dims|dtype|backend`` unsharded (the historical format,
+    so committed caches keep hitting), with ``|mesh=<axes>`` inserted before
+    the backend inside a mesh context — block-size winners depend on the
+    per-shard *local* problem, so sharded runs must not reuse (or clobber)
+    single-device entries. Keys always end in ``|<backend>``: ``save_cache``
+    filters on that suffix. ``mesh`` overrides the ambient-context lookup
+    (tests use an AbstractMesh, which has geometry but no ``with`` support
+    on this JAX version)."""
+    mesh = mesh if mesh is not None else _active_mesh()
+    tag = ""
+    if mesh is not None:
+        sizes = {a: int(mesh.shape[a]) for a in mesh.axis_names}
+        dims = _local_dims(dims, sizes)
+        tag = "mesh=" + "x".join(f"{a}{n}" for a, n in sizes.items()) + "|"
     d = "/".join(f"{k}={v}" for k, v in sorted(dims.items()))
-    return f"{op}|{d}|{jnp.dtype(dtype).name}|{jax.default_backend()}"
+    return f"{op}|{d}|{jnp.dtype(dtype).name}|{tag}{jax.default_backend()}"
 
 
 def backend_generation() -> str:

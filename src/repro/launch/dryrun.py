@@ -1,5 +1,8 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.xla_flags import force_host_device_count
+
+# Appends to XLA_FLAGS (user-set flags survive) and warns — instead of
+# silently no-oping — when JAX already initialized in this process.
+force_host_device_count(512)
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 

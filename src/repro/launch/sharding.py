@@ -55,6 +55,13 @@ def _trailing_spec(keys, leaf) -> Tuple:
     if last == "router":
         return (None, None)
 
+    # int8-quantized frozen weight: ``w`` became a {"q","scale"} dict, so
+    # the path ends [..., proj, "w", "q"|"scale"]. q keeps w's layout;
+    # scale is [..., 1, d_out] and _guard drops any axis landing on the
+    # size-1 dim, so both can just reuse the w rule one level up.
+    if last in ("q", "scale") and parent == "w":
+        return _trailing_spec(keys[:-1], leaf)
+
     if in_moe and last in ("w", "a", "b") and parent in ("gate", "up", "down") \
             and hasattr(leaf, "ndim"):
         return ("model", None, None)    # expert-parallel stacks [E, ·, ·]

@@ -1,0 +1,59 @@
+"""XLA_FLAGS plumbing that must run *before* JAX initializes.
+
+The host-platform device-count flag (``--xla_force_host_platform_device_count``)
+is the whole basis of the emulated-fleet harness: one CPU process presents N
+XLA devices, so the sharding stack (``launch/sharding.py``, ``runtime/
+elastic.py``) runs real multi-device programs in CI. XLA reads the flag once,
+when the backend initializes — setting it later silently does nothing, and
+*overwriting* ``XLA_FLAGS`` (what ``launch/dryrun.py`` used to do) clobbers
+whatever flags the user had exported.
+
+This module therefore never imports ``jax`` at module level, appends instead
+of overwriting, and warns loudly when it detects that the backend already
+exists (the request cannot take effect in this process).
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+import warnings
+
+_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def jax_initialized() -> bool:
+    """True when a JAX backend already exists in this process (at which
+    point XLA_FLAGS edits are too late). Never initializes one itself."""
+    if "jax" not in sys.modules:
+        return False
+    xb = sys.modules.get("jax._src.xla_bridge")
+    return bool(getattr(xb, "_backends", None))
+
+
+def force_host_device_count(n: int, *, env: dict = os.environ) -> bool:
+    """Request ``n`` emulated host (CPU) devices by appending the XLA flag.
+
+    Preserves every other flag already in ``XLA_FLAGS`` (an existing
+    device-count request is replaced, not duplicated). Returns True when the
+    request can still take effect; returns False — after a ``UserWarning`` —
+    when JAX has already initialized a backend, in which case the caller
+    should run the multi-device work in a fresh subprocess instead (see
+    ``launch/fleet.py``).
+    """
+    flags = env.get("XLA_FLAGS", "")
+    flags = re.sub(rf"{_COUNT_FLAG}=\d+\s*", "", flags).strip()
+    env["XLA_FLAGS"] = (flags + f" {_COUNT_FLAG}={n}").strip()
+    # editing a *copy* of the environment (for a subprocess) is always fine,
+    # however far along this process's JAX is
+    if env is not os.environ:
+        return True
+    if jax_initialized():
+        warnings.warn(
+            f"{_COUNT_FLAG}={n} was requested after JAX initialized its "
+            "backend; the emulated device count cannot apply to this "
+            "process. Launch a subprocess with the flag in its environment "
+            "(launch/fleet.py does this) instead.", UserWarning,
+            stacklevel=2)
+        return False
+    return True

@@ -63,6 +63,34 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     return out
 
 
+def predicted_grad_sync_bytes(n_trainable: int, mesh_axes: Dict[str, int],
+                              dtype_bytes: int = 4) -> int:
+    """Analytic lower bound on the per-device data-parallel gradient-sync
+    payload of one train step, for checking compiled HLO (via
+    :func:`collective_bytes`) against the roofline model — the emulated-fleet
+    suite (tests/multihost/) asserts measured >= predicted.
+
+    Every trainable element is reduced over the DP axes exactly once per
+    step, and a device holds at least ``1/model`` of the elements (model-
+    sharded LoRA factors), so::
+
+        bytes >= n_trainable * dtype_bytes / model    (when dp > 1)
+
+    With a single data shard there is nothing to sync (0).
+
+    Caller picks what to count: when checking *static* HLO text, pass the
+    per-loop-body element count (one layer slice of leaves that live under
+    a scanned block stack — the compiled program contains that body once
+    however many times it runs) in the gradient's *compute* dtype.
+    """
+    dp = 1
+    for a in ("pod", "data"):
+        dp *= mesh_axes.get(a, 1)
+    if dp <= 1:
+        return 0
+    return (n_trainable * dtype_bytes) // max(mesh_axes.get("model", 1), 1)
+
+
 def model_flops(cfg, shape) -> float:
     """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); D = processed tokens.
 

@@ -22,10 +22,23 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 def make_mesh_from_devices(devices: Sequence[jax.Device],
                            model_parallel: int,
                            pods: int = 1) -> Mesh:
-    """Build the largest (pod, data, model) mesh from a surviving device set."""
+    """Build the largest (pod, data, model) mesh from a surviving device set.
+
+    Axis naming matches ``launch/sharding.py``'s expectations: ``("data",
+    "model")`` for a single pod, ``("pod", "data", "model")`` when ``pods >
+    1``. Raises ``ValueError`` (survives ``python -O``, unlike an assert)
+    when the survivor count is not divisible by ``model_parallel × pods`` —
+    the caller must drop stragglers to a divisible count first.
+    """
     n = len(devices)
-    assert n % (model_parallel * pods) == 0, \
-        f"{n} devices not divisible by model={model_parallel} × pods={pods}"
+    if model_parallel < 1 or pods < 1:
+        raise ValueError(f"model_parallel={model_parallel} and pods={pods} "
+                         "must be >= 1")
+    if n == 0 or n % (model_parallel * pods) != 0:
+        raise ValueError(
+            f"{n} surviving devices not divisible by "
+            f"model={model_parallel} x pods={pods}; shrink to a divisible "
+            f"survivor count before resizing")
     data = n // (model_parallel * pods)
     arr = np.asarray(devices[:pods * data * model_parallel]).reshape(
         pods, data, model_parallel)
@@ -47,7 +60,8 @@ def reshard_tree(tree, mesh: Mesh, specs):
 
 def rebalance_batch(global_batch: int, old_hosts: int, new_hosts: int) -> int:
     """Per-host batch after a resize, keeping the global batch invariant."""
-    assert global_batch % new_hosts == 0, \
-        (f"global batch {global_batch} cannot be kept invariant over "
-         f"{new_hosts} hosts — choose a divisor count")
+    if new_hosts < 1 or global_batch % new_hosts != 0:
+        raise ValueError(
+            f"global batch {global_batch} cannot be kept invariant over "
+            f"{new_hosts} hosts — choose a divisor count")
     return global_batch // new_hosts

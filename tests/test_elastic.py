@@ -27,8 +27,45 @@ def test_rebalance_batch_keeps_global_invariant():
 
 
 def test_rebalance_batch_rejects_non_divisor_host_count():
-    with pytest.raises(AssertionError, match="cannot be kept invariant"):
+    # ValueError, not AssertionError: the guard must survive ``python -O``
+    with pytest.raises(ValueError, match="cannot be kept invariant"):
         rebalance_batch(256, 16, 7)
+    with pytest.raises(ValueError, match="cannot be kept invariant"):
+        rebalance_batch(256, 16, 0)
+
+
+def test_rebalance_batch_shrink_chain_preserves_global():
+    # 8 -> 6 -> 4 hosts (a straggler drain): per-host batch grows at every
+    # step and the global product is invariant throughout
+    global_batch, chain = 24, [8, 6, 4]
+    for old, new in zip(chain, chain[1:]):
+        per_host = rebalance_batch(global_batch, old, new)
+        assert per_host * new == global_batch
+    assert [rebalance_batch(global_batch, 8, n) for n in chain] == [3, 4, 6]
+
+
+# ------------------------------------------------- make_mesh_from_devices
+def test_make_mesh_rejects_non_divisible_survivors():
+    devs = jax.devices()
+    with pytest.raises(ValueError, match="not divisible"):
+        make_mesh_from_devices(devs, model_parallel=len(devs) + 1)
+    with pytest.raises(ValueError, match="not divisible"):
+        make_mesh_from_devices([], model_parallel=1)
+
+
+def test_make_mesh_rejects_bad_axis_sizes():
+    devs = jax.devices()
+    with pytest.raises(ValueError, match="must be >= 1"):
+        make_mesh_from_devices(devs, model_parallel=0)
+    with pytest.raises(ValueError, match="must be >= 1"):
+        make_mesh_from_devices(devs, model_parallel=1, pods=0)
+
+
+def test_make_mesh_single_pod_axis_naming():
+    mesh = make_mesh_from_devices(jax.devices(), model_parallel=1)
+    # single pod: no "pod" axis — launch/sharding.py's dp_axes contract
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.shape["model"] == 1
 
 
 # ------------------------------------------------------------ reshard_tree

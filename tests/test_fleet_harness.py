@@ -1,0 +1,185 @@
+"""In-process halves of the emulated-fleet harness: XLA_FLAGS plumbing,
+sharding-aware autotune cache keys, the --model-parallel spec field, the
+quantized-leaf sharding rules and the degrade-ladder × sharding seam.
+(Everything needing real multi-device meshes lives in tests/multihost/.)"""
+import json
+import os
+import warnings
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.api.spec import TrainSpec, build_arg_parser
+from repro.kernels import autotune
+from repro.launch import sharding as sh
+from repro.launch.xla_flags import (force_host_device_count,
+                                    jax_initialized)
+
+
+# ------------------------------------------------------------- xla_flags
+def test_force_host_device_count_appends_not_overwrites():
+    env = {"XLA_FLAGS": "--xla_dump_to=/tmp/d --xla_foo=1"}
+    assert force_host_device_count(8, env=env)
+    assert "--xla_dump_to=/tmp/d" in env["XLA_FLAGS"]
+    assert "--xla_foo=1" in env["XLA_FLAGS"]
+    assert "--xla_force_host_platform_device_count=8" in env["XLA_FLAGS"]
+
+
+def test_force_host_device_count_replaces_existing_request():
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=512 "
+                        "--xla_bar=2"}
+    force_host_device_count(4, env=env)
+    assert env["XLA_FLAGS"].count("xla_force_host_platform_device_count") == 1
+    assert "--xla_force_host_platform_device_count=4" in env["XLA_FLAGS"]
+    assert "--xla_bar=2" in env["XLA_FLAGS"]
+
+
+def test_force_host_device_count_warns_when_too_late(monkeypatch):
+    jax.devices()   # force backend init (importing jax alone is not enough)
+    assert jax_initialized()
+    monkeypatch.setenv("XLA_FLAGS", "")
+    with pytest.warns(UserWarning, match="after JAX initialized"):
+        ok = force_host_device_count(4)
+    assert ok is False
+    # the flag is still written: a *subprocess* inheriting the env works
+    assert "--xla_force_host_platform_device_count=4" in \
+        os.environ["XLA_FLAGS"]
+
+
+def test_env_copy_never_warns_even_after_init():
+    env = dict(os.environ)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert force_host_device_count(8, env=env)
+
+
+# -------------------------------------------------- autotune: mesh-aware keys
+def test_key_format_unchanged_without_mesh():
+    # the committed autotune_cache/*.json keys must keep hitting
+    k = autotune._key("rmsnorm", {"M": 1024, "d": 64}, "float32")
+    assert k == f"rmsnorm|M=1024/d=64|float32|{jax.default_backend()}"
+    assert "mesh=" not in k
+
+
+def test_local_dims_divides_sharded_dims():
+    dims = {"M": 1024, "K": 64, "N": 128}
+    out = autotune._local_dims(dims, {"data": 4, "model": 2})
+    assert out == {"M": 256, "K": 64, "N": 128}
+    # non-divisible dims stay global
+    assert autotune._local_dims({"M": 10}, {"data": 4, "model": 1}) == \
+        {"M": 10}
+    # flash seq dims split over the model (Megatron-SP) axis
+    out = autotune._local_dims({"Nq": 512, "Nk": 512, "D": 64},
+                               {"data": 2, "model": 2})
+    assert out == {"Nq": 256, "Nk": 256, "D": 64}
+    # pods compose into the DP factor
+    assert autotune._local_dims({"M": 64}, {"pod": 2, "data": 2,
+                                            "model": 1}) == {"M": 16}
+
+
+def test_no_ambient_mesh_in_this_process():
+    # the unit-test process never enters a mesh context: ambient lookup is
+    # None and keys stay in the historical format
+    assert autotune._active_mesh() is None
+
+
+def test_key_tags_mesh_and_keeps_backend_suffix(fake_mesh):
+    mesh = fake_mesh(4, 2)
+    k = autotune._key("lora_fused", {"M": 128, "K": 64, "N": 64},
+                      "float32", mesh=mesh)
+    assert "|mesh=data4xmodel2|" in k
+    assert "M=32" in k   # local rows: 128 / dp=4
+    # save_cache filters on the backend suffix — sharded entries must keep it
+    assert k.endswith("|" + jax.default_backend())
+
+
+def test_save_cache_keeps_sharded_entries(tmp_path, fake_mesh, monkeypatch):
+    mesh = fake_mesh(2, 1)
+    autotune._ensure_loaded()
+    k_plain = autotune._key("rmsnorm", {"M": 64, "d": 32}, "float32")
+    k_mesh = autotune._key("rmsnorm", {"M": 64, "d": 32}, "float32",
+                           mesh=mesh)
+    assert k_plain != k_mesh
+    autotune._CACHE[k_plain] = {"bm": 128}
+    autotune._CACHE[k_mesh] = {"bm": 256}
+    try:
+        path = autotune.save_cache(str(tmp_path / "cpu.json"))
+        saved = json.load(open(path))
+        assert saved[k_plain] == {"bm": 128}
+        assert saved[k_mesh] == {"bm": 256}
+        # the two contexts resolve to different winners
+        monkeypatch.setattr(autotune, "_active_mesh", lambda: mesh)
+        assert autotune.choose_blocks("rmsnorm", "float32",
+                                      M=64, d=32) == {"bm": 256}
+        monkeypatch.setattr(autotune, "_active_mesh", lambda: None)
+        assert autotune.choose_blocks("rmsnorm", "float32",
+                                      M=64, d=32) == {"bm": 128}
+    finally:
+        autotune._CACHE.pop(k_plain, None)
+        autotune._CACHE.pop(k_mesh, None)
+
+
+# --------------------------------------------------- spec: --model-parallel
+def test_model_parallel_cli_round_trip():
+    spec = TrainSpec(model_parallel=4)
+    argv = spec.to_cli_args()
+    assert "--model-parallel" in argv
+    assert TrainSpec.from_cli_args(argv) == spec
+    ns = build_arg_parser().parse_args([])
+    assert ns.model_parallel == 1
+
+
+def test_model_parallel_must_be_positive():
+    with pytest.raises(ValueError, match="model-parallel"):
+        TrainSpec(model_parallel=0).validate()
+
+
+# ------------------------------------------- quantized-leaf sharding rules
+def test_quantized_leaves_follow_weight_layout(fake_mesh):
+    from repro.configs import get_config
+    from repro.core.quant import quantize_params
+    from repro.models import model as model_lib
+
+    cfg = get_config("qwen2.5-0.5b").reduced()
+    mesh = fake_mesh(2, 2)
+    params = jax.eval_shape(
+        lambda: quantize_params(model_lib.init_params(
+            jax.random.PRNGKey(0), cfg), "int8"))
+    specs = sh.param_specs(cfg, params, mesh)
+    qkv = specs["blocks"]["attn"]["q"]["w"]
+    # column-parallel projection: int8 q sharded like w, scale [1, d_out]
+    # follows the out dim
+    assert tuple(qkv["q"]) == (None, None, "model")
+    assert tuple(qkv["scale"]) == (None, None, "model")
+    down = specs["blocks"]["mlp"]["down"]["w"]
+    # row-parallel: q sharded on d_in; scale's size-1 dim guarded off
+    assert tuple(down["q"]) == (None, "model", None)
+    assert tuple(down["scale"]) == (None, None, None)
+
+
+# ------------------------------------------- degrade ladder × sharding seam
+def test_ladder_rungs_produce_mesh_coherent_specs(fake_mesh):
+    """Every registry-valid ladder rung must yield a spec the sharding stack
+    can place on a model-parallel mesh: batch_spec falls back to replication
+    when the halved batch stops dividing DP, and activation_spec only puts
+    seq on the model axis when it still divides."""
+    from repro.runtime.degrade import DegradationLadder
+
+    mesh = fake_mesh(2, 2)
+    base = TrainSpec(reduced=True, engine="mesp_pallas", optimizer="sgd",
+                     batch=2, seq=64, model_parallel=2)
+    rungs = list(DegradationLadder().candidates(base))
+    assert {r for _, r in rungs} >= {"halve_batch", "engine_mesp",
+                                     "quantize_int8", "truncate_seq"}
+    for cand, rung in rungs:
+        cand.validate()
+        bspec = sh.batch_spec(mesh, cand.batch)    # must never raise
+        if cand.batch % 2:   # dp=2 no longer divides: replicate
+            assert tuple(bspec) == ()
+        msize = 2
+        act = sh.activation_spec(mesh, cand.batch,
+                                 seq_on_model=(cand.seq % msize == 0))
+        assert all(ax in (None, "data", "model") or
+                   all(a in ("data", "model") for a in ax)
+                   for ax in tuple(act)), (rung, act)

@@ -12,16 +12,6 @@ from repro.roofline.analysis import collective_bytes, model_flops
 from repro.configs.base import SHAPES
 
 
-def _fake_mesh(data=4, model=4):
-    # Mesh over a device "grid" built from the single CPU device repeated is
-    # not allowed; use an abstract mesh for spec-construction tests.
-    # JAX 0.4.x wants ((name, size), ...); 0.5+ wants (sizes, names).
-    try:
-        return jax.sharding.AbstractMesh((("data", data), ("model", model)))
-    except TypeError:
-        return jax.sharding.AbstractMesh((data, model), ("data", "model"))
-
-
 @pytest.mark.parametrize("arch", ASSIGNED)
 def test_param_specs_rank_matches(arch):
     cfg = get_config(arch).reduced()
@@ -37,9 +27,9 @@ def test_param_specs_rank_matches(arch):
         assert len(spec) <= leaf.ndim, (path, leaf.shape, spec)
 
 
-def test_divisibility_guard():
+def test_divisibility_guard(fake_mesh):
     cfg = get_config("whisper-tiny")  # vocab 51865: not divisible by 16
-    mesh = _fake_mesh(16, 16)
+    mesh = fake_mesh(16, 16)
     params = jax.eval_shape(
         lambda: __import__("repro.models.model", fromlist=["m"]).init_params(
             jax.random.PRNGKey(0), cfg))
@@ -62,8 +52,8 @@ def test_moe_expert_parallel_specs():
     assert tuple(w_spec) == (None, "model", None, None)
 
 
-def test_batch_spec_fallbacks():
-    mesh = _fake_mesh(16, 16)
+def test_batch_spec_fallbacks(fake_mesh):
+    mesh = fake_mesh(16, 16)
     spec = tuple(sh.batch_spec(mesh, 256))
     assert spec in ((("data",),), ("data",))  # P may normalize 1-tuples
     assert tuple(sh.batch_spec(mesh, 1)) == ()

@@ -181,7 +181,7 @@ def test_elastic_mesh_and_reshard():
     out = reshard_tree(tree, mesh, specs)
     np.testing.assert_array_equal(out["w"], tree["w"])
     assert rebalance_batch(256, 16, 8) == 32
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="cannot be kept invariant"):
         rebalance_batch(256, 16, 7)
 
 
