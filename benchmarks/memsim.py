@@ -211,6 +211,45 @@ def simulate(arch: str, method: str, seq: int, batch: int = 1,
                      activations_mb=acts / 2**20)
 
 
+def kv_page_mb(cfg: ArchConfig, page_size: int) -> float:
+    """One KV page (``page_size`` token positions, k+v, every layer) in MB.
+    Matches the per-slot dense cache layout (bf16 k/v over
+    ``n_layers × n_kv_heads × head_dim``)."""
+    hd = cfg.resolved_head_dim
+    return (2 * cfg.n_layers * cfg.n_kv_heads * hd * page_size * BF16) / 2**20
+
+
+def adapter_slot_mb(cfg: ArchConfig, rank: int) -> float:
+    """One resident tenant's stacked (A, B) leaves in MB (AdapterStore)."""
+    return _lora_params(cfg, rank) * BF16 / 2**20
+
+
+def serve_residency(cfg, *, rank: int, resident_adapters: int,
+                    kv_pages: int, page_size: int, batch: int = 1,
+                    weights_fmt: str = "bf16") -> dict:
+    """Serve-side resident-set accounting (MB breakdown + total).
+
+    Terms: base weights HBM-resident (``resident_weight_mb`` — bf16 or the
+    int8 format), the AdapterStore's resident tenants (``resident_adapters``
+    × one stacked (A, B) set at ``rank``), live KV pages (the paged
+    allocator's reserved pages), and the decode working set (one block's
+    transient intermediates at N=1 plus the logits head, for ``batch``
+    concurrent rows). The continuous batcher's admission headroom check and
+    the ``serving`` table in ``benchmarks/run.py`` both consume this.
+    """
+    if isinstance(cfg, str):
+        cfg = get_config(cfg)
+    weights_mb = resident_weight_mb(cfg, weights_fmt)
+    adapters_mb = resident_adapters * adapter_slot_mb(cfg, rank)
+    kv_mb = kv_pages * kv_page_mb(cfg, page_size)
+    decode_mb = (_per_block_intermediates(cfg, batch, 1, rank)
+                 + _head_working_set(cfg, batch, 1)) / 2**20
+    total = weights_mb + adapters_mb + kv_mb + decode_mb + RUNTIME_MB
+    return {"weights_mb": weights_mb, "adapters_mb": adapters_mb,
+            "kv_mb": kv_mb, "decode_mb": decode_mb,
+            "runtime_mb": RUNTIME_MB, "total_mb": total}
+
+
 def table(models, methods, seq: int = 256, rank: int = 8):
     rows = []
     for m in models:

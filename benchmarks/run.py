@@ -328,9 +328,54 @@ def table_quant():
            f"(int8 W0), {1 - xq['arg_mb'] / xb['arg_mb']:.0%} lower.")
 
 
+# ---------------------------------------------------------------- serving
+def table_serving():
+    """Multi-tenant serving: continuous-batching tokens/s, grouped-kernel
+    schedule, and the serve-side residency split -> BENCH_serving.json
+    (see benchmarks/serving.py; wall-clock is annotation-only off-TPU)."""
+    from benchmarks import serving as S
+    result = S.run_and_write()
+    cont, gk, sim = (result["continuous"], result["grouped_kernel"],
+                     result["memsim"])
+    s = result["setting"]
+    report("## Serving — multi-tenant continuous batching "
+           f"(backend={result['backend']}, interpret={result['interpret']})")
+    report(f"{s['adapters']} tenants / {s['capacity']} resident slots / "
+           f"{s['slots']} decode rows (tile {s['tile']}), "
+           f"{s['requests']} requests × ({s['prompt_len']} prompt + "
+           f"{s['max_new']} new) tokens.")
+    report("| trace | tok/s | steps | evictions | store hits/misses | "
+           "peak pages |")
+    report("|---|---|---|---|---|---|")
+    for key in ("multi", "single"):
+        c = cont[key]
+        emit(f"serving/{key}/tokens_per_s", f"{c['tokens_per_s']:.1f}",
+             f"adapters={c['adapters']} evict={c['store']['evictions']}")
+        report(f"| {key} ({c['adapters']} adapter"
+               f"{'s' if c['adapters'] > 1 else ''}) | "
+               f"{c['tokens_per_s']:.0f} | {c['counters']['steps']} | "
+               f"{c['store']['evictions']} | {c['store']['hits']}/"
+               f"{c['store']['misses']} | {c['pages']['peak_pages']} |")
+    sched = gk["schedule"]
+    emit("serving/grouped/grid_fraction", f"{sched['grid_fraction']:.3f}",
+         f"live={sched['live_tiles']}/{sched['dense_tiles']}")
+    emit("serving/grouped/loop_over_grouped",
+         f"{gk['loop_over_grouped']:.3f}", f"err={gk['max_abs_err']:.1e}")
+    emit("serving/memsim/total_mb", f"{sim['total_mb']:.1f}",
+         f"adapters={sim['adapters_mb']:.2f} kv={sim['kv_mb']:.2f}")
+    report(f"\nGrouped kernel vs per-adapter loop: {gk['grouped_ms']:.2f} / "
+           f"{gk['loop_ms']:.2f} ms (ratio {gk['loop_over_grouped']:.2f}), "
+           f"max |err| {gk['max_abs_err']:.1e}; schedule launches "
+           f"{sched['live_tiles']}/{sched['dense_tiles']} tiles "
+           f"({sched['grid_fraction']:.0%} of the dense grid, "
+           f"{sched['empty_groups']} idle tenants skipped). Residency: "
+           f"{sim['total_mb']:.1f} MB total ({sim['adapters_mb']:.2f} "
+           f"adapters + {sim['kv_mb']:.2f} KV pages).")
+
+
 TABLES = {"t1": table1, "t2": table2, "t3": table3, "t4": table4,
           "t5": table5, "fig2": figure2, "kernels": kernels_bench,
-          "quant": table_quant}
+          "quant": table_quant, "serving": table_serving}
 
 
 def _merge_report(path, sections):

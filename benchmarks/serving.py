@@ -1,0 +1,192 @@
+"""Multi-tenant serving benchmark — tokens/s and schedule accounting for
+the grouped-LoRA continuous-batching path.
+
+    PYTHONPATH=src python -m benchmarks.serving [--out PATH] [--fast]
+
+Three sections, written to ``benchmarks/results/BENCH_serving.json``:
+
+* ``continuous`` — end-to-end served tokens/s of the
+  :class:`repro.serve.ContinuousBatcher` on a reduced dense config, same
+  request trace with 8 tenant adapters vs a single tenant (the multi-tenant
+  cost of adapter routing + store churn), plus the full admission /
+  eviction / page counters. Timed after a synced, discarded warmup run.
+* ``grouped_kernel`` — one grouped-kernel launch
+  (``kernels/lora_grouped.py``) vs the per-adapter Python loop it replaces
+  (slice rows per adapter, dense matmul + 2-D LoRA each), on a ragged
+  multi-tenant row layout; carries the *deterministic* trace-time schedule
+  stats (``tiling.grouped_schedule_stats``: live vs dense tiles, grid
+  fraction) that ``scripts/check_bench_regression.py --serving`` gates.
+* ``memsim`` — the analytic serve-residency breakdown for the benchmark
+  setting (``benchmarks/memsim.serve_residency``).
+
+Wall-clock columns are annotation-only off-TPU (``interpret: true``): the
+Pallas interpreter measures emulation cost, not hardware — the schedule
+stats and counters are the host-independent columns.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+DEFAULT_OUT = os.path.join(RESULTS_DIR, "BENCH_serving.json")
+
+SETTING = {"arch": "qwen2.5-0.5b", "reduced": True, "slots": 16, "tile": 2,
+           "adapters": 8, "capacity": 4, "requests": 16, "prompt_len": 3,
+           "max_new": 6, "max_len": 32, "page_size": 8, "rank": None}
+
+
+def _trace(n, uids, prompt_len, max_new):
+    from repro.serve import Request
+    return [Request(f"r{i}", uids[i % len(uids)],
+                    tuple(1 + (3 * i + j) % 97 for j in range(prompt_len)),
+                    max_new) for i in range(n)]
+
+
+def _run_continuous(cfg, params, n_adapters: int, s: dict) -> dict:
+    from repro.serve import AdapterStore, ContinuousBatcher, Request, \
+        synthetic_adapters
+    store = AdapterStore(params, capacity=min(s["capacity"], n_adapters))
+    bat = ContinuousBatcher(cfg, store, slots=s["slots"], tile=s["tile"],
+                            max_len=s["max_len"], page_size=s["page_size"])
+    uids = [f"tenant{i}" for i in range(n_adapters)]
+    for i, uid in enumerate(uids):
+        bat.register_adapter(uid, synthetic_adapters(params, i))
+    # warmup: compile the decode step, then reset every counter (discarded)
+    bat.run([Request("warmup", uids[0], (1, 2, 3), 2)])
+    for c in (bat.counters, store.counters, bat.alloc.counters):
+        c.update({k: 0 for k in c})
+    bat.results.clear()
+
+    reqs = _trace(s["requests"], uids, s["prompt_len"], s["max_new"])
+    t0 = time.perf_counter()
+    results = bat.run(reqs)
+    jax.block_until_ready(bat.cache)
+    dt = time.perf_counter() - t0
+    served = sum(len(v) for v in results.values())
+    return {"adapters": n_adapters, "served_tokens": served,
+            "completed": len(results), "elapsed_s": dt,
+            "tokens_per_s": served / dt, "counters": dict(bat.counters),
+            "store": dict(store.counters),
+            "pages": dict(bat.alloc.counters),
+            "store_slot_mb": store.slot_bytes / 2**20}
+
+
+def bench_continuous(s: dict) -> dict:
+    from repro.configs import get_config
+    from repro.models import model as M
+    cfg = get_config(s["arch"]).reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    multi = _run_continuous(cfg, params, s["adapters"], s)
+    single = _run_continuous(cfg, params, 1, s)
+    return {"multi": multi, "single": single,
+            "multi_over_single": multi["elapsed_s"] / single["elapsed_s"]}
+
+
+def bench_grouped_kernel() -> dict:
+    """One grouped launch vs the per-adapter slice-and-matmul loop, on a
+    ragged tenant layout (some tenants idle — the schedule skips their
+    tiles; that skip is what the regression gate pins)."""
+    from repro.kernels import ops, tiling
+    from repro.kernels.lora_grouped import lora_grouped
+
+    interp = ops.pallas_interpret()
+    E, K, N, r, bm = 8, 64, 64, 8, 8
+    sizes = (8, 0, 16, 8, 0, 24, 0, 8)          # ragged; 3 idle tenants
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    xs = [jax.random.normal(ks[0], (c, K), jnp.float32) for c in sizes]
+    w0 = jax.random.normal(ks[1], (1, K, N), jnp.float32) * 0.1
+    a = jax.random.normal(ks[2], (E, K, r), jnp.float32) * 0.1
+    b = jax.random.normal(ks[3], (E, r, N), jnp.float32) * 0.1
+
+    gid, _ = tiling.grouped_schedule(sizes, bm)
+    xp = tiling.pack_ragged_rows(jnp.concatenate(xs), sizes, bm)
+
+    grouped = jax.jit(lambda x: lora_grouped(
+        x, w0, a, b, jnp.asarray(gid), 2.0, bm=bm, bn=N, bk=K,
+        interpret=interp))
+
+    def loop(xs):
+        return [x @ w0[0] + 2.0 * ((x @ a[g]) @ b[g])
+                for g, x in enumerate(xs) if x.shape[0]]
+
+    loop_j = jax.jit(loop)
+
+    def _time(fn, *args, repeats=3):
+        jax.block_until_ready(fn(*args))        # compile — never timed
+        best = float("inf")
+        for _ in range(repeats + 1):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    g_ms = _time(grouped, xp) * 1e3
+    l_ms = _time(loop_j, xs) * 1e3
+    # equivalence of the two comparators (the benchmark is only honest if
+    # they compute the same thing)
+    got = tiling.unpack_ragged_rows(grouped(xp), sizes, bm)
+    ref = jnp.concatenate(loop_j(xs))
+    err = float(jnp.max(jnp.abs(got - ref)))
+    stats = tiling.grouped_schedule_stats(sizes, bm)
+    return {"shape": {"E": E, "K": K, "N": N, "r": r, "bm": bm,
+                      "group_sizes": list(sizes)},
+            "grouped_ms": g_ms, "loop_ms": l_ms,
+            "loop_over_grouped": l_ms / g_ms, "max_abs_err": err,
+            "schedule": stats}
+
+
+def run_and_write(out: str = DEFAULT_OUT, setting: dict | None = None) -> dict:
+    from benchmarks import memsim
+    from repro.configs import get_config
+    from repro.kernels import ops
+
+    s = dict(SETTING, **(setting or {}))
+    cfg = get_config(s["arch"]).reduced()
+    s["rank"] = cfg.lora.rank
+    interp = ops.pallas_interpret()
+    cont = bench_continuous(s)
+    gk = bench_grouped_kernel()
+    sim = memsim.serve_residency(
+        cfg, rank=cfg.lora.rank, resident_adapters=s["capacity"],
+        kv_pages=s["slots"] * s["max_len"] // s["page_size"],
+        page_size=s["page_size"], batch=s["slots"])
+    result = {
+        "backend": jax.default_backend(),
+        "interpret": interp,
+        "note": ("interpret mode: wall-clock measures the Pallas emulation, "
+                 "not TPU perf") if interp else "compiled TPU kernels",
+        "setting": s,
+        "continuous": cont,
+        "grouped_kernel": gk,
+        "memsim": sim,
+    }
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--adapters", type=int, default=None,
+                    help="override tenant count (default from SETTING)")
+    args = ap.parse_args(argv)
+    over = {} if args.adapters is None else {"adapters": args.adapters}
+    result = run_and_write(args.out, over)
+    print(json.dumps(result, indent=1, sort_keys=True))
+    print(f"# wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

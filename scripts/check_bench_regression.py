@@ -32,6 +32,15 @@ collective-traffic floors (host-independent) are hard checks, the
 normalized step-time curve is bounded with generous slack — only an
 efficiency *collapse* (sharded program gone super-linear) fails CI.
 
+``--serving FRESH.json`` gates a fresh ``benchmarks/serving.py`` run
+against the committed ``BENCH_serving.json``. Hard checks are the
+deterministic columns: the grouped-kernel schedule (live-tile count and
+grid fraction, with ``TOLERANCE`` slack — launching tiles for idle tenants
+again is a regression), grouped-vs-loop numerical agreement, and full
+completion of the serving trace (every admitted request finished). The
+grouped-vs-loop speedup ratio and tokens/s are wall-clock: annotation-only
+under the interpreter, same as the kernels gate.
+
     PYTHONPATH=src python -m benchmarks.kernels --steps 2 --out /tmp/f.json
     PYTHONPATH=src python scripts/check_bench_regression.py /tmp/f.json
     PYTHONPATH=src python scripts/check_bench_regression.py \\
@@ -54,6 +63,12 @@ RES_BASELINE = (Path(__file__).resolve().parent.parent / "benchmarks" /
                 "results" / "BENCH_resilience.json")
 SCALING_BASELINE = (Path(__file__).resolve().parent.parent / "benchmarks" /
                     "results" / "BENCH_scaling.json")
+SERVING_BASELINE = (Path(__file__).resolve().parent.parent / "benchmarks" /
+                    "results" / "BENCH_serving.json")
+
+#: grouped-vs-loop max abs error ceiling for --serving (float32 comparators
+#: computing the same math — anything above this is a kernel bug, not noise)
+SERVING_ERR = 1e-4
 
 #: efficiency-collapse bound for --scaling: a fleet's step time normalized
 #: by its own 1-device row may exceed the committed normalized curve by at
@@ -227,6 +242,85 @@ def check_scaling(fresh_doc: dict, base_doc: dict) -> list[str]:
     return errors
 
 
+def check_serving(fresh_doc: dict, base_doc: dict) -> list[str]:
+    """Gate the multi-tenant serving benchmark (``benchmarks/serving.py``).
+
+    Hard (host-independent) checks:
+      * grouped-kernel schedule: live tiles / grid fraction within
+        ``TOLERANCE`` of the committed baseline (idle tenants must keep
+        being skipped);
+      * grouped kernel ≡ per-adapter loop within ``SERVING_ERR``;
+      * the continuous trace completed every admitted request, and the
+        multi-tenant trace actually exercised multi-tenancy (>1 adapter).
+
+    Tokens/s and the loop-over-grouped ratio are wall-clock: annotated,
+    with the interpret-mode caveat printed when either run used it.
+    """
+    errors = []
+    fgk = fresh_doc.get("grouped_kernel", {})
+    bgk = base_doc.get("grouped_kernel", {})
+    fs, bs = fgk.get("schedule", {}), bgk.get("schedule", {})
+    if not fs or not bs:
+        return ["serving: missing grouped_kernel.schedule section "
+                "(did benchmarks/serving.py run?)"]
+    if fgk.get("shape") != bgk.get("shape"):
+        print(f"note: serving kernel shape changed {bgk.get('shape')} -> "
+              f"{fgk.get('shape')}; comparing grid fraction only")
+        gated = ("grid_fraction",)
+    else:
+        gated = ("live_tiles", "grid_fraction")
+    for col in gated:
+        b, f = float(bs[col]), float(fs[col])
+        if f > b * (1 + TOLERANCE):
+            errors.append(f"serving {col}: {f:g} vs baseline {b:g} "
+                          f"(>{TOLERANCE:.0%} more launched tiles — idle "
+                          f"tenants no longer skipped?)")
+        else:
+            print(f"OK: serving {col} = {f:g} (baseline {b:g})")
+    err = float(fgk.get("max_abs_err", float("inf")))
+    if err > SERVING_ERR:
+        errors.append(f"serving grouped-vs-loop max |err| {err:g} exceeds "
+                      f"{SERVING_ERR:g} — grouped kernel diverged from the "
+                      f"per-adapter reference")
+    else:
+        print(f"OK: serving grouped-vs-loop max |err| {err:g}")
+    for key in ("multi", "single"):
+        c = fresh_doc.get("continuous", {}).get(key, {})
+        admitted = c.get("counters", {}).get("admitted")
+        completed = c.get("completed")
+        if admitted is None or completed != admitted:
+            errors.append(f"serving {key}: completed {completed} of "
+                          f"{admitted} admitted requests — trace stalled")
+        else:
+            print(f"OK: serving {key} completed {completed}/{admitted} "
+                  f"requests")
+    multi = fresh_doc.get("continuous", {}).get("multi", {})
+    if multi.get("adapters", 0) < 2:
+        errors.append(f"serving: multi trace served "
+                      f"{multi.get('adapters')} adapter(s) — not a "
+                      f"multi-tenant run")
+    for doc, tag in ((fresh_doc, "fresh"), (base_doc, "baseline")):
+        if doc.get("interpret"):
+            print(f"note: {tag} serving run is interpret-mode "
+                  f"(backend={doc.get('backend')}) — tokens/s and the "
+                  f"loop-over-grouped ratio measure the Pallas emulation, "
+                  f"not TPU perf")
+    for key in ("multi", "single"):
+        fc = fresh_doc.get("continuous", {}).get(key, {})
+        bc = base_doc.get("continuous", {}).get(key, {})
+        if "tokens_per_s" in fc:
+            extra = (f" (baseline {bc['tokens_per_s']:.1f})"
+                     if "tokens_per_s" in bc else "")
+            print(f"   serving {key} tokens/s: "
+                  f"{fc['tokens_per_s']:.1f}{extra}")
+    if "loop_over_grouped" in fgk:
+        extra = (f" (baseline {bgk['loop_over_grouped']:.3f})"
+                 if "loop_over_grouped" in bgk else "")
+        print(f"   serving loop_over_grouped: "
+              f"{fgk['loop_over_grouped']:.3f}{extra}")
+    return errors
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("fresh", nargs="?", default=None,
@@ -246,11 +340,17 @@ def main(argv=None) -> int:
                          "committed device-count curve (collective floors "
                          "hard; step-time collapse with slack)")
     ap.add_argument("--scaling-baseline", default=str(SCALING_BASELINE))
+    ap.add_argument("--serving", default=None, metavar="FRESH_JSON",
+                    help="gate a fresh BENCH_serving.json against the "
+                         "committed baseline (schedule + equivalence + "
+                         "completion hard; tokens/s annotate-only)")
+    ap.add_argument("--serving-baseline", default=str(SERVING_BASELINE))
     args = ap.parse_args(argv)
     if args.fresh is None and args.gradquality is None \
-            and args.resilience is None and args.scaling is None:
+            and args.resilience is None and args.scaling is None \
+            and args.serving is None:
         ap.error("nothing to do: pass a fresh BENCH_kernels.json, "
-                 "--gradquality, --resilience, and/or --scaling")
+                 "--gradquality, --resilience, --scaling, and/or --serving")
 
     errors = []
     if args.fresh is not None:
@@ -292,6 +392,19 @@ def main(argv=None) -> int:
         if not sc_errors:
             print("OK: scaling curve within tolerance of the baseline")
         errors += sc_errors
+
+    if args.serving is not None:
+        with open(args.serving) as f:
+            sv_fresh = json.load(f)
+        with open(args.serving_baseline) as f:
+            sv_base = json.load(f)
+        sv_errors = check_serving(sv_fresh, sv_base)
+        for e in sv_errors:
+            print(f"FAIL: {e}")
+        if not sv_errors:
+            print("OK: serving schedule/equivalence/completion within "
+                  "tolerance of the baseline")
+        errors += sv_errors
 
     return 1 if errors else 0
 

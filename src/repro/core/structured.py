@@ -236,16 +236,37 @@ gelu.defvjp(_gelu_fwd, _gelu_bwd)
 
 
 def _attn_mask(n_q: int, n_k: int, window: int, causal: bool, q_offset) -> Array:
-    """[n_q, n_k] additive mask. q position i sits at absolute q_offset+i."""
-    qpos = jnp.arange(n_q) + q_offset
+    """[n_q, n_k] additive mask. q position i sits at absolute q_offset+i.
+    ``q_offset`` may be a per-batch-row vector [B] (continuous-batching
+    decode, every slot at its own position) — the mask then gains a leading
+    batch dim: [B, n_q, n_k]."""
+    off = jnp.asarray(q_offset)
+    qpos = (off[..., None] if off.ndim else off) + jnp.arange(n_q)
     kpos = jnp.arange(n_k)
-    d = qpos[:, None] - kpos[None, :]
-    ok = jnp.ones((n_q, n_k), jnp.bool_)
+    d = qpos[..., :, None] - kpos
+    ok = jnp.ones(d.shape, jnp.bool_)
     if causal:
         ok = ok & (d >= 0)
     if window > 0:
         ok = ok & (d < window)
     return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def _sdpa_mask(Nq: int, Nk: int, window: int, causal: bool, q_offset,
+               kv_len) -> Array:
+    """Combined positional + valid-length mask, broadcastable against
+    [B, Hkv, G, Nq, Nk] scores. Scalar q_offset/kv_len keep the historical
+    [Nq, Nk]-shaped mask; per-row vectors lift it to [B, 1, 1, Nq, Nk]."""
+    mask = _attn_mask(Nq, Nk, window, causal, q_offset)
+    if mask.ndim == 3:
+        mask = mask[:, None, None]                    # [B,1,1,Nq,Nk]
+    if kv_len is not None:
+        kvl = jnp.asarray(kv_len)
+        km = jnp.where(jnp.arange(Nk) < kvl[..., None], 0.0, -jnp.inf)
+        if km.ndim == 2:                              # [B,Nk] per-row lengths
+            km = km[:, None, None, None]
+        mask = mask + km
+    return mask
 
 
 def _sdpa_ref(q, k, v, window: int, causal: bool, q_offset, kv_len):
@@ -261,10 +282,10 @@ def _sdpa_ref(q, k, v, window: int, causal: bool, q_offset, kv_len):
     qg = q.reshape(B, Hkv, G, Nq, D)
     scores = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k,
                         preferred_element_type=jnp.float32) / jnp.sqrt(D)
-    mask = _attn_mask(Nq, k.shape[2], window, causal, q_offset)
-    if kv_len is not None:  # decode: only first kv_len cache slots are valid
-        mask = mask + jnp.where(jnp.arange(k.shape[2]) < kv_len, 0.0, -jnp.inf)
-    scores = scores + mask
+    # decode: only the first kv_len cache slots are valid (kv_len/q_offset
+    # may be per-row vectors — continuous batching)
+    scores = scores + _sdpa_mask(Nq, k.shape[2], window, causal, q_offset,
+                                 kv_len)
     probs = jax.nn.softmax(scores, -1)
     out = jnp.einsum("bhgqk,bhkd->bhgqd", probs.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
@@ -293,9 +314,7 @@ def _sdpa_bwd(window, causal, res, g):
     gg = g.reshape(B, Hkv, G, Nq, D).astype(q.dtype)
     # --- recompute probs (A.2 forward) ---
     scores = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k, **f32) / jnp.sqrt(D)
-    mask = _attn_mask(Nq, Nk, window, causal, q_offset)
-    if kv_len is not None:
-        mask = mask + jnp.where(jnp.arange(Nk) < kv_len, 0.0, -jnp.inf)
+    mask = _sdpa_mask(Nq, Nk, window, causal, q_offset, kv_len)
     probs = jax.nn.softmax(scores + mask, -1)
     pl = probs.astype(q.dtype)
     # --- A.2 eqs 17-21 ---

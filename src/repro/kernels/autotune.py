@@ -163,6 +163,18 @@ def _heuristic(op: str, dims: Dict[str, int], dtype) -> Dict[str, int]:
                 > _VMEM_BUDGET:
             bm //= 2
         return {"bm": bm}
+    if op in ("lora_grouped", "lora_grouped_dx",
+              "lora_grouped_q", "lora_grouped_dx_q"):
+        # bm is layout-determined (the per-group row-tile granularity chosen
+        # by the dispatcher before packing); only bn/bk are tunable here.
+        blk = _matmul_blocks(dims["M"], dims["K"], dims["N"], dtype,
+                             w_itemsize=1 if op.endswith("_q") else None)
+        blk.pop("bm", None)
+        return blk
+    if op == "lora_grouped_dab":
+        # same residency shape as lora_dab (x[bm,K] + g[bm,N] resident) but
+        # bm is fixed by the group layout, so nothing to choose.
+        return {}
     if op == "rmsnorm":
         d = max(dims["d"], 1)
         bm = _pick(dims["M"], (512, 256))

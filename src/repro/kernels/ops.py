@@ -7,8 +7,9 @@ ExecutionPolicy backend.
 
 * checks :func:`*_supported` for the given operands and falls back to the
   structured jnp path (``core/structured``) on unsupported shapes — per-op,
-  so e.g. MoE per-expert batched linears fall back while the attention in
-  the same block still runs the kernel;
+  so one unsupported op never drags the whole block off the kernel path
+  (MoE per-expert [E,·,·] linears have their own grouped kernel family
+  below and no longer fall back);
 * picks block sizes from ``kernels/autotune.py`` (heuristic table, optionally
   overridden by a measured cache);
 * runs the Pallas kernel with ``interpret=True`` automatically on non-TPU
@@ -27,13 +28,17 @@ import os
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core import quant, structured
 from repro.kernels import autotune
 from repro.kernels import lora_fused as _lf
+from repro.kernels import lora_grouped as _lg
 from repro.kernels import lora_quant as _lq
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rope as _rope
+from repro.kernels import tiling
 
 # Below this many query rows the dense structured sdpa beats the kernel's
 # padding + grid overhead (and is easier to cross-check).
@@ -158,7 +163,8 @@ def lora_supported(x, w0) -> bool:
 def lora_linear(x, w0, a, b, bias=None, scale: float = 2.0, *,
                 policy=None, interpret=None):
     """Dispatch: Pallas LoRA linear, structured fallback on unsupported
-    shapes (e.g. MoE per-expert [E,·,·] weights). ``w0`` may be a dense
+    shapes (MoE per-expert [E,·,·] weights route to
+    :func:`lora_grouped_linear` instead). ``w0`` may be a dense
     matrix or a quantized ``{"q", "scale"}`` leaf — quantized weights route
     to the dequant-in-VMEM kernels, falling back to the structured jnp path
     on a dequantized copy (``core/quant.maybe_dequant``). ``policy``
@@ -173,6 +179,160 @@ def lora_linear(x, w0, a, b, bias=None, scale: float = 2.0, *,
     else:
         y = lora_linear_kernel(x, w0, a, b, scale, interpret)
     # bias is frozen (no grad needed): a plain add stores no residuals
+    return y + bias if bias is not None else y
+
+
+# ---------------------------------------------------------------------------
+# Grouped LoRA linear: many (W0, A, B) stack entries, one kernel launch.
+# Rows are packed so every bm-row tile belongs to one group and an int32
+# gid[t] array (scalar-prefetched — values may be runtime-traced) routes each
+# tile's stack entries into VMEM. Closes the last structured-jnp fallback in
+# pallas mode (MoE per-expert [E,·,·] linears, bf16 AND int8) and powers the
+# multi-tenant serving decode path (shared base, per-request adapters).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _grouped_core(x, w0, a, b, gid, scale: float, bm: int,
+                  interpret: bool = False):
+    """Packed-rows grouped LoRA linear. x:[Mp,K] (Mp % bm == 0, every bm-row
+    tile one group), w0:[Ew,K,N] (Ew ∈ {1, E}), a:[E,K,r], b:[E,r,N],
+    gid:int32[Mp//bm] -> [Mp,N]."""
+    blk = autotune.choose_blocks("lora_grouped", x.dtype, M=x.shape[0],
+                                 K=x.shape[1], N=w0.shape[2])
+    return _lg.lora_grouped(x, w0, a, b, gid, scale, bm=bm,
+                            interpret=interpret, **blk)
+
+
+def _grouped_fwd(x, w0, a, b, gid, scale, bm, interpret):
+    return _grouped_core(x, w0, a, b, gid, scale, bm, interpret), \
+        (x, w0, a, b, gid)
+
+
+def _grouped_bwd(scale, bm, interpret, res, g):
+    x, w0, a, b, gid = res
+    g = g.astype(x.dtype)
+    M, K = x.shape
+    N = w0.shape[2]
+    dx = _lg.lora_grouped_dx(g, w0, a, b, gid, scale, bm=bm,
+                             interpret=interpret,
+                             **autotune.choose_blocks("lora_grouped_dx",
+                                                      x.dtype, M=M, K=K, N=N))
+    da, db = _lg.lora_grouped_dab(x, g, a, b, gid, scale, bm=bm,
+                                  interpret=interpret)
+    return dx, jnp.zeros_like(w0), da, db, structured._zero_cot(gid)
+
+
+_grouped_core.defvjp(_grouped_fwd, _grouped_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def _grouped_core_q(x, q, s, a, b, gid, scale: float, bm: int,
+                    interpret: bool = False):
+    """int8-base variant: q:int8[Ew,K,N], s:f32[Ew,1,N] — the per-group dense
+    W0 exists only tile-wise in VMEM, never in HBM."""
+    blk = autotune.choose_blocks("lora_grouped_q", x.dtype, M=x.shape[0],
+                                 K=x.shape[1], N=q.shape[2])
+    return _lg.lora_grouped_q(x, q, s, a, b, gid, scale, bm=bm,
+                              interpret=interpret, **blk)
+
+
+def _grouped_fwd_q(x, q, s, a, b, gid, scale, bm, interpret):
+    return _grouped_core_q(x, q, s, a, b, gid, scale, bm, interpret), \
+        (x, q, s, a, b, gid)
+
+
+def _grouped_bwd_q(scale, bm, interpret, res, g):
+    x, q, s, a, b, gid = res
+    g = g.astype(x.dtype)
+    M, K = x.shape
+    N = q.shape[2]
+    dx = _lg.lora_grouped_dx_q(g, q, s, a, b, gid, scale, bm=bm,
+                               interpret=interpret,
+                               **autotune.choose_blocks("lora_grouped_dx_q",
+                                                        x.dtype, M=M, K=K,
+                                                        N=N))
+    da, db = _lg.lora_grouped_dab(x, g, a, b, gid, scale, bm=bm,
+                                  interpret=interpret)
+    return (dx, structured._zero_cot(q), jnp.zeros_like(s), da, db,
+            structured._zero_cot(gid))
+
+
+_grouped_core_q.defvjp(_grouped_fwd_q, _grouped_bwd_q)
+
+
+def _grouped_bm(rows: int) -> int:
+    """Row-tile granularity for a group layout: full 128-row tiles for big
+    groups, one 8-row-aligned tile otherwise (8 = f32 sublane minimum —
+    per-group padding cost scales with bm, so small groups get small tiles)."""
+    return 128 if rows >= 128 else tiling.ceil_to(max(rows, 1), 8)
+
+
+def _grouped_dispatch(xp, w0, a, b, gid, scale, bm, interpret):
+    if quant.is_quantized(w0):
+        return _grouped_core_q(xp, w0["q"], w0["scale"], a, b,
+                               jnp.asarray(gid, jnp.int32), scale, bm,
+                               interpret)
+    return _grouped_core(xp, w0, a, b, jnp.asarray(gid, jnp.int32), scale,
+                         bm, interpret)
+
+
+def lora_grouped_linear(x, w0, a, b, scale: float = 2.0, *, policy=None,
+                        interpret=None):
+    """Batched-uniform grouped LoRA linear (the MoE expert shape):
+    x:[E,C,K], w0:[E,K,N] dense or quantized ``{"q","scale"}`` ([E,K,N] int8
+    + [E,1,N] scale), a:[E,K,r], b:[E,r,N] -> [E,C,N]. Differentiable in
+    (x, a, b); W0 is frozen (zero cotangent)."""
+    E, C, K = x.shape
+    bm = _grouped_bm(C)
+    Cp = tiling.ceil_to(C, bm)
+    xp = tiling.pad_dim(x, bm, 1).reshape(E * Cp, K)
+    gid = np.repeat(np.arange(E, dtype=np.int32), Cp // bm)
+    y = _grouped_dispatch(xp, w0, a, b, gid, scale, bm,
+                          _resolve_interpret(policy, interpret))
+    return y.reshape(E, Cp, -1)[:, :C]
+
+
+def lora_grouped_ragged(x, group_sizes, w0, a, b, scale: float = 2.0, *,
+                        bm: int = 8, policy=None, interpret=None):
+    """Ragged grouped LoRA linear: x:[M,K] is the concatenation of per-group
+    row blocks (``group_sizes[g]`` rows each, zero-size groups allowed).
+    Packing/unpacking to the bm-tile layout happens here (plain jnp, so
+    gradients flow through the pad/slice); the packed core carries the
+    custom_vjp."""
+    sizes = tuple(int(s) for s in group_sizes)
+    N = (w0["q"] if quant.is_quantized(w0) else w0).shape[-1]
+    if sum(sizes) == 0:
+        return jnp.zeros((0, N), x.dtype)
+    gid, _ = tiling.grouped_schedule(sizes, bm)
+    xp = tiling.pack_ragged_rows(x, sizes, bm)
+    y = _grouped_dispatch(xp, w0, a, b, gid, scale, bm,
+                          _resolve_interpret(policy, interpret))
+    return tiling.unpack_ragged_rows(y, sizes, bm)
+
+
+def lora_grouped_decode(x, w0, a, b, tile_gid, bias=None, scale: float = 2.0,
+                        *, bm: int = 8, policy=None, interpret=None):
+    """Runtime-routed grouped linear for the serving decode path: a shared
+    frozen base (w0:[K,N] dense or quantized) plus a *stack* of resident
+    adapters (a:[R,K,r], b:[R,r,N]); ``tile_gid`` int32 [M//bm] holds each
+    slot tile's AdapterStore slot and may be a traced array — re-routing
+    adapters across steps never recompiles. Non-pallas backends use the
+    gather reference (same math, jnp)."""
+    M, K = x.shape
+    if M % bm:
+        raise ValueError(f"decode rows {M} not a multiple of tile {bm}")
+    if policy is not None and policy.backend == "pallas":
+        w0e = ({"q": w0["q"][None], "scale": w0["scale"][None]}
+               if quant.is_quantized(w0) else w0[None])
+        y = _grouped_dispatch(x, w0e, a, b, tile_gid, scale, bm,
+                              _resolve_interpret(policy, interpret))
+    else:
+        row_gid = jnp.repeat(jnp.asarray(tile_gid, jnp.int32), bm)
+        w = quant.maybe_dequant(w0, x.dtype)
+        h = jnp.einsum("mk,mkr->mr", x, a[row_gid])
+        y = (x @ w + scale * jnp.einsum("mr,mrn->mn", h, b[row_gid])
+             ).astype(x.dtype)
     return y + bias if bias is not None else y
 
 

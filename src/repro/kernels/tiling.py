@@ -160,6 +160,92 @@ def flash_schedule_kv(n_q: int, n_k: int, bq: int, bk: int, causal: bool,
             np.asarray(qi, np.int32), np.asarray(interior, np.int32))
 
 
+# ---------------------------------------------------------------------------
+# grouped (ragged per-adapter / per-expert) LoRA tile schedules
+#
+# The grouped LoRA kernels flatten a set of row groups — MoE expert buffers,
+# or per-user adapter micro-batches — into one [Mp, K] operand where every
+# bm-row tile belongs to exactly one group. The flat-step -> group mapping is
+# an int32 schedule handed to the kernel via scalar prefetch; the BlockSpec
+# index maps read ``gid[t]`` to gather that tile's (W0, A, B) stack entry
+# into VMEM. Group sizes are static here (trace-time numpy), so empty groups
+# launch no tiles at all; the decode path instead passes a *runtime* gid
+# array over a fixed slot layout (grid size static, values traced).
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def grouped_schedule(group_sizes: tuple, bm: int):
+    """Tile schedule for a ragged group layout padded to ``bm`` rows.
+
+    Each group g with ``s = group_sizes[g] > 0`` rows occupies a contiguous
+    ``ceil_to(s, bm)``-row span of the packed layout; empty groups occupy
+    nothing (no tiles launched — the "live (group, tile) pairs only" contract
+    mirrors ``flash_schedule``). Returns ``(gid, offs)``: int32 numpy
+    ``gid[t]`` is the group of flat tile t, and ``offs[g]`` the packed row
+    offset of group g (``offs[-1] == Mp``). Tiles of one group are contiguous,
+    so the dA/dB kernel detects group boundaries by comparing gid at t±1.
+    """
+    gid, offs = [], [0]
+    for g, s in enumerate(group_sizes):
+        t = ceil_to(int(s), bm) // bm
+        gid.extend([g] * t)
+        offs.append(offs[-1] + t * bm)
+    return np.asarray(gid, np.int32), np.asarray(offs, np.int64)
+
+
+def pack_ragged_rows(x, group_sizes: tuple, bm: int):
+    """[M, K] concatenated ragged groups -> [Mp, K] with every group's span
+    zero-padded to a ``bm`` multiple (so each tile sees one group only)."""
+    segs, off = [], 0
+    for s in group_sizes:
+        s = int(s)
+        if s == 0:
+            continue
+        segs.append(pad_dim(x[off:off + s], bm, 0))
+        off += s
+    if not segs:
+        return jnp.zeros((0,) + x.shape[1:], x.dtype)
+    return jnp.concatenate(segs, 0)
+
+
+def unpack_ragged_rows(xp, group_sizes: tuple, bm: int):
+    """Inverse of :func:`pack_ragged_rows`: slice each group's valid rows
+    back out of the padded layout and re-concatenate."""
+    segs, poff = [], 0
+    for s in group_sizes:
+        s = int(s)
+        if s == 0:
+            continue
+        segs.append(xp[poff:poff + s])
+        poff += ceil_to(s, bm)
+    if not segs:
+        return jnp.zeros((0,) + xp.shape[1:], xp.dtype)
+    return jnp.concatenate(segs, 0)
+
+
+def grouped_schedule_stats(group_sizes: tuple, bm: int) -> dict:
+    """Live-tile counts for a ragged group layout — the arithmetic behind
+    the serving benchmark columns. The dense reference is the batched
+    ``[E, Cmax, ·]`` layout (every group padded to the largest group), which
+    is what a naive per-expert/per-adapter batched matmul would launch."""
+    sizes = [int(s) for s in group_sizes]
+    gid, offs = grouped_schedule(tuple(sizes), bm)
+    cmax = max(sizes) if sizes else 0
+    dense = len(sizes) * (ceil_to(cmax, bm) // bm)
+    live = int(len(gid))
+    return {
+        "bm": bm,
+        "groups": len(sizes),
+        "empty_groups": sum(1 for s in sizes if s == 0),
+        "rows": sum(sizes),
+        "padded_rows": int(offs[-1]),
+        "dense_tiles": dense,
+        "live_tiles": live,
+        "grid_fraction": live / float(dense) if dense else 1.0,
+    }
+
+
 def flash_schedule_stats(Nq: int, Nk: int, bq: int, bk: int, causal: bool,
                          window: int) -> dict:
     """Live/interior/boundary tile counts for one head's (fwd or bwd-dq)

@@ -12,6 +12,7 @@ where ``w``/``bias`` are frozen and ``a``/``b`` are trainable.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -95,7 +96,7 @@ def linear_params(key, d_in: int, d_out: int, cfg: ArchConfig, *,
 
 
 def apply_linear(p, x, cfg: ArchConfig, *,
-                 policy: ExecutionPolicy = STRUCTURED):
+                 policy: ExecutionPolicy = STRUCTURED, adapter_tiles=None):
     """LoRA linear. ``policy.backend``: "structured" (MeSP — h recomputed),
     "pallas" (MeSP via fused TPU kernels), "store_h" (Table 5 ablation),
     "plain" (MeBP — framework autodiff).
@@ -104,9 +105,28 @@ def apply_linear(p, x, cfg: ArchConfig, *,
     leaf (``core/quant.quantize_frozen``). The pallas path hands the
     quantized leaf to the dequant-in-VMEM kernels; the jnp paths dequantize
     to a dense matrix first (``maybe_dequant``) — same math, W0 materialized.
+
+    Multi-tenant serving: when ``p["a"]/p["b"]`` are *stacked* adapter
+    resident sets ([R, d_in, r] / [R, r, d_out] — AdapterStore), the int32
+    ``adapter_tiles`` array routes each batch-slot tile to its adapter
+    (``kernels/ops.lora_grouped_decode``; values may be runtime-traced so
+    re-routing never recompiles). Decode only: x must be [B, 1, d].
     """
     backend = policy.backend
     bias = p.get("bias")
+    if "a" in p and p["a"].ndim == 3:
+        if adapter_tiles is None:
+            raise ValueError("stacked adapters need adapter_tiles routing")
+        if x.ndim != 2 and x.shape[-2] != 1:
+            raise ValueError("grouped adapter routing is decode-only "
+                             f"(got x {x.shape})")
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        bm = x2.shape[0] // adapter_tiles.shape[0]
+        y = kops.lora_grouped_decode(x2, p["w"], p["a"], p["b"],
+                                     adapter_tiles, bias, cfg.lora.scale,
+                                     bm=bm, policy=policy)
+        return y.reshape(*lead, y.shape[-1])
     if "a" in p:
         if backend == "pallas":
             return kops.lora_linear(x, p["w"], p["a"], p["b"], bias,
@@ -193,25 +213,33 @@ def attention(p, x, cfg: ArchConfig, *, window: int = 0, causal: bool = True,
               cache: Optional[dict] = None, pos: Array | int = 0,
               kv_x: Optional[Array] = None, use_rope: bool = True,
               policy: ExecutionPolicy = STRUCTURED,
-              shard=None) -> Tuple[Array, Optional[dict]]:
+              shard=None, adapter_tiles=None) -> Tuple[Array, Optional[dict]]:
     """Multi-head attention with the structured backward.
 
-    ``cache`` (decode): {"k": [B,Hkv,S,D], "v": ..., "len": scalar int32}.
+    ``cache`` (decode): {"k": [B,Hkv,S,D], "v": ..., "len": int32 — scalar,
+    or [B] per-slot lengths for continuous batching (every slot at its own
+    position; writes and masks then vectorize per row)}.
     ``kv_x``: source for k/v (cross-attention) — defaults to x.
+    ``adapter_tiles``: multi-tenant decode routing for stacked q/k/v/o
+    adapters (see :func:`apply_linear`).
     """
     B, N, _ = x.shape
     hd = cfg.resolved_head_dim
     src = x if kv_x is None else kv_x
     Nk = src.shape[1]
+    lin = functools.partial(apply_linear, cfg=cfg, policy=policy,
+                            adapter_tiles=adapter_tiles)
 
-    q = apply_linear(p["q"], x, cfg, policy=policy).reshape(B, N, cfg.n_heads, hd)
-    k = apply_linear(p["k"], src, cfg, policy=policy).reshape(B, Nk, cfg.n_kv_heads, hd)
-    v = apply_linear(p["v"], src, cfg, policy=policy).reshape(B, Nk, cfg.n_kv_heads, hd)
+    q = lin(p["q"], x).reshape(B, N, cfg.n_heads, hd)
+    k = lin(p["k"], src).reshape(B, Nk, cfg.n_kv_heads, hd)
+    v = lin(p["v"], src).reshape(B, Nk, cfg.n_kv_heads, hd)
 
     rope_tabs = None
     if use_rope:
-        qpos = jnp.arange(N) + pos
-        kpos = jnp.arange(Nk) + (pos if kv_x is None else 0)
+        parr = jnp.asarray(pos)
+        off = parr[..., None] if parr.ndim else parr  # [B,1] when per-slot
+        qpos = jnp.arange(N) + off
+        kpos = jnp.arange(Nk) + (off if kv_x is None else 0)
         fuse = (policy.backend == "pallas" and policy.fuse_rope
                 and cache is None and kv_x is None and hd % 2 == 0)
         if fuse:
@@ -233,16 +261,14 @@ def attention(p, x, cfg: ArchConfig, *, window: int = 0, causal: bool = True,
             # ring buffer: sliding-window layers keep only ``window`` slots
             # (long_500k decode: 512× less cache for gemma3 local layers)
             slot = cache["len"] % window
-            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 2)
-            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 2)
+            kc = _cache_write(cache["k"], k, slot)
+            vc = _cache_write(cache["v"], v, slot)
             new_cache = {"k": kc, "v": vc, "len": cache["len"] + N}
             out = _ring_attend(q, kc, vc, cache["len"], window)
         else:
             # linear cache: append k/v at ``len`` and attend over valid slots
-            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k,
-                                                     cache["len"], 2)
-            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v,
-                                                     cache["len"], 2)
+            kc = _cache_write(cache["k"], k, cache["len"])
+            vc = _cache_write(cache["v"], v, cache["len"])
             new_cache = {"k": kc, "v": vc, "len": cache["len"] + N}
             out = structured.sdpa(q, kc, vc, window, causal,
                                   cache["len"], cache["len"] + N)
@@ -261,7 +287,17 @@ def attention(p, x, cfg: ArchConfig, *, window: int = 0, causal: bool = True,
         out = structured.sdpa(q, k, v, window, causal)
 
     out = out.transpose(0, 2, 1, 3).reshape(B, N, cfg.n_heads * hd)
-    return apply_linear(p["o"], out, cfg, policy=policy), new_cache
+    return lin(p["o"], out), new_cache
+
+
+def _cache_write(c, u, ln):
+    """Write ``u`` into cache ``c`` ([B,Hkv,S,D]) at slot offset ``ln`` —
+    a scalar (whole batch at one position, training/simple decode) or a
+    [B] vector (continuous batching: every slot at its own length)."""
+    if jnp.ndim(ln) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(c, u, ln, 2)
+    row = lambda ci, ui, li: jax.lax.dynamic_update_slice_in_dim(ci, ui, li, 1)
+    return jax.vmap(row)(c, u, ln)
 
 
 def _ring_attend(q, kc, vc, qpos, window: int):
@@ -269,13 +305,17 @@ def _ring_attend(q, kc, vc, qpos, window: int):
 
     q: [B,H,1,D]; kc/vc: [B,Hkv,W,D]; slot s holds absolute position
     p(s) = qpos − ((qpos − s) mod W), valid when 0 ≤ p(s) and p(s) > qpos−W.
+    ``qpos`` may be a [B] vector (per-slot decode).
     """
     B, H, _, D = q.shape
     Hkv, W = kc.shape[1], kc.shape[2]
     G = H // Hkv
     slots = jnp.arange(W)
-    pos = qpos - jnp.mod(qpos - slots, W)
-    valid = (pos >= 0) & (pos > qpos - W) & (pos <= qpos)
+    qp = qpos[..., None] if jnp.ndim(qpos) else qpos
+    pos = qp - jnp.mod(qp - slots, W)
+    valid = (pos >= 0) & (pos > qp - W) & (pos <= qp)
+    if valid.ndim == 2:                     # [B,W] -> [B,1,1,1,W]
+        valid = valid[:, None, None, None, :]
     s = jnp.einsum("bhgqd,bhkd->bhgqk", q.reshape(B, Hkv, G, 1, D), kc,
                    preferred_element_type=jnp.float32) / jnp.sqrt(D)
     s = jnp.where(valid, s, -jnp.inf)
@@ -286,15 +326,17 @@ def _ring_attend(q, kc, vc, qpos, window: int):
 
 
 def make_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype, *,
-                  window: int = 0) -> dict:
+                  window: int = 0, per_slot: bool = False) -> dict:
     """KV cache; sliding-window layers get a ring buffer of ``window`` slots
-    when that is smaller than the full length."""
+    when that is smaller than the full length. ``per_slot``: track a [B]
+    length vector instead of one scalar, so continuous batching can hold
+    every slot at its own position."""
     hd = cfg.resolved_head_dim
     slots = window if (window and window < max_len) else max_len
     return {
         "k": jnp.zeros((batch, cfg.n_kv_heads, slots, hd), dtype),
         "v": jnp.zeros((batch, cfg.n_kv_heads, slots, hd), dtype),
-        "len": jnp.zeros((), jnp.int32),
+        "len": jnp.zeros((batch,) if per_slot else (), jnp.int32),
     }
 
 
@@ -321,14 +363,16 @@ def mlp_params(key, cfg: ArchConfig, d_ff: Optional[int] = None, *,
     return p
 
 
-def mlp(p, x, cfg: ArchConfig, *, policy: ExecutionPolicy = STRUCTURED):
+def mlp(p, x, cfg: ArchConfig, *, policy: ExecutionPolicy = STRUCTURED,
+        adapter_tiles=None):
+    lin = functools.partial(apply_linear, cfg=cfg, policy=policy,
+                            adapter_tiles=adapter_tiles)
     if "gate" in p:
-        g = apply_linear(p["gate"], x, cfg, policy=policy)
-        u = apply_linear(p["up"], x, cfg, policy=policy)
-        return apply_linear(p["down"], act_silu(g, policy) * u, cfg,
-                            policy=policy)
-    u = apply_linear(p["up"], x, cfg, policy=policy)
-    return apply_linear(p["down"], act_gelu(u, policy), cfg, policy=policy)
+        g = lin(p["gate"], x)
+        u = lin(p["up"], x)
+        return lin(p["down"], act_silu(g, policy) * u)
+    u = lin(p["up"], x)
+    return lin(p["down"], act_gelu(u, policy))
 
 
 # ---------------------------------------------------------------------------

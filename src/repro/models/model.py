@@ -39,22 +39,24 @@ Array = jax.Array
 
 
 def dense_block(bp, x, cfg, *, window=0, policy: ExecutionPolicy = STRUCTURED,
-                cache=None, pos=0, shard=None):
+                cache=None, pos=0, shard=None, adapter_tiles=None):
     h, new_cache = layers.attention(
         bp["attn"], layers.norm(bp["ln1"], x, cfg, policy=policy), cfg,
-        window=window, cache=cache, pos=pos, policy=policy, shard=shard)
+        window=window, cache=cache, pos=pos, policy=policy, shard=shard,
+        adapter_tiles=adapter_tiles)
     x = x + h
     x = x + layers.mlp(bp["mlp"],
                        layers.norm(bp["ln2"], x, cfg, policy=policy),
-                       cfg, policy=policy)
+                       cfg, policy=policy, adapter_tiles=adapter_tiles)
     return x, new_cache
 
 
 def moe_block(bp, x, cfg, *, window=0, policy: ExecutionPolicy = STRUCTURED,
-              cache=None, pos=0, shard=None):
+              cache=None, pos=0, shard=None, adapter_tiles=None):
     h, new_cache = layers.attention(
         bp["attn"], layers.norm(bp["ln1"], x, cfg, policy=policy), cfg,
-        window=window, cache=cache, pos=pos, policy=policy, shard=shard)
+        window=window, cache=cache, pos=pos, policy=policy, shard=shard,
+        adapter_tiles=adapter_tiles)
     x = x + h
     x = x + moe_lib.moe_mlp(bp["moe"],
                             layers.norm(bp["ln2"], x, cfg, policy=policy),
@@ -349,17 +351,22 @@ def loss_fn(params, cfg: ArchConfig, batch: dict, *,
 # ---------------------------------------------------------------------------
 
 
-def init_cache(cfg: ArchConfig, batch: int, max_len: int):
-    """Stacked per-layer decode state."""
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, *,
+               per_slot: bool = False):
+    """Stacked per-layer decode state. ``per_slot``: [B] length vectors
+    instead of one scalar (continuous batching — attention-cache families
+    only)."""
     dtype = jnp.dtype(cfg.dtype)
 
     def stack(make, n):
         return jax.vmap(lambda _: make())(jnp.arange(n))
 
     fam = cfg.family
+    if per_slot and fam not in ("dense", "vlm", "moe"):
+        raise ValueError(f"per_slot decode caches unsupported for {fam!r}")
     if fam in ("dense", "vlm", "moe"):
         kv = lambda w=0: layers.make_kv_cache(cfg, batch, max_len, dtype,
-                                              window=w)
+                                              window=w, per_slot=per_slot)
         if cfg.window_pattern:
             # ring (window-sized) and linear (full-length) caches differ in
             # shape → keyed per pattern position, stacked over groups only
@@ -407,16 +414,24 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int):
 
 
 def decode_step(params, cfg: ArchConfig, cache, tokens: Array, *,
-                policy: ExecutionPolicy = STRUCTURED):
+                policy: ExecutionPolicy = STRUCTURED, adapter_tiles=None):
     """One decode step. tokens: [B, 1]. Returns (logits [B,1,V], new cache).
 
     ``policy`` selects the forward execution regime (inference: the
     structured custom_vjp forwards == plain forwards; quantized params
     carry their format in the tree, dequantized per the policy's backend).
+
+    ``adapter_tiles``: int32 [B // bm] per-tile adapter routing for stacked
+    multi-tenant LoRA params (see :func:`layers.apply_linear`); requires a
+    ``per_slot`` cache so co-batched requests sit at independent positions.
     """
     x = layers.embed(params["embed"], tokens, cfg)
     fam = cfg.family
     new_cache = dict(cache)
+    if adapter_tiles is not None and fam not in ("dense", "vlm"):
+        # moe: expert stacks already consume the [E, ., .] group axis —
+        # per-tenant expert adapters would need (expert × tenant) grouping
+        raise ValueError(f"adapter routing unsupported for {fam!r}")
 
     if fam in ("dense", "vlm", "moe"):
         if cfg.window_pattern:
@@ -430,7 +445,8 @@ def decode_step(params, cfg: ArchConfig, cache, tokens: Array, *,
                     lc = gc[f"l{i}"]
                     x, nc = dense_block(bp, x, cfg, cache=lc, pos=lc["len"],
                                         window=cfg.window_pattern[i],
-                                        policy=policy)
+                                        policy=policy,
+                                        adapter_tiles=adapter_tiles)
                     ncs[f"l{i}"] = nc
                 return x, ncs
 
@@ -442,13 +458,14 @@ def decode_step(params, cfg: ArchConfig, cache, tokens: Array, *,
                 x, nc0 = dense_block(params["block0"], x, cfg,
                                      cache=cache["block0"],
                                      pos=cache["block0"]["len"],
-                                     policy=policy)
+                                     policy=policy,
+                                     adapter_tiles=adapter_tiles)
                 new_cache["block0"] = nc0
 
             def body(x, bs):
                 bp, lc = bs
                 x, nc = blk(bp, x, cfg, cache=lc, pos=lc["len"],
-                            policy=policy)
+                            policy=policy, adapter_tiles=adapter_tiles)
                 return x, nc
 
             x, nc = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))

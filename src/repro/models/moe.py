@@ -131,18 +131,23 @@ def moe_mlp(p, x, cfg: ArchConfig, *,
     store_h = policy.backend == "store_h"
 
     def elin(q, z):
-        # per-expert [E,·,·] weights: structured jnp path in every mode
-        # (kernel dispatch would fall back anyway); quantized experts are
-        # dequantized here — batched int8 expert kernels are future work.
+        # per-expert [E,·,·] weights. pallas backend: the grouped kernel
+        # family (kernels/lora_grouped.py) runs all experts in one launch,
+        # dequantizing int8 expert stacks tile-wise in VMEM — a dense
+        # per-expert W0 never exists in HBM (jaxpr-asserted in tests).
         from repro.core.quant import maybe_dequant
-        w = maybe_dequant(q["w"], z.dtype)
         if "a" in q:
+            if policy.backend == "pallas":
+                from repro.kernels import ops as kops
+                return kops.lora_grouped_linear(z, q["w"], q["a"], q["b"],
+                                                cfg.lora.scale, policy=policy)
+            w = maybe_dequant(q["w"], z.dtype)
             if policy.backend == "plain":
                 return z @ w + cfg.lora.scale * ((z @ q["a"]) @ q["b"])
             fn = structured.lora_linear_store_h if store_h \
                 else structured.lora_linear
             return fn(z, w, q["a"], q["b"], None, cfg.lora.scale)
-        return z @ w
+        return z @ maybe_dequant(q["w"], z.dtype)
 
     hidden = layers.act_silu(elin(p["gate"], ebuf), policy) * elin(p["up"], ebuf)
     y_ebuf = elin(p["down"], hidden)                         # [E, B·C, d]

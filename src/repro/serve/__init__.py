@@ -1,0 +1,9 @@
+"""Multi-tenant adapter serving: AdapterStore residency, paged KV
+accounting, and the continuous-batching decode loop (see docs/serving.md).
+"""
+from repro.serve.loop import ContinuousBatcher, Request
+from repro.serve.paged import PagedKVAllocator
+from repro.serve.store import AdapterStore, StoreFull, synthetic_adapters
+
+__all__ = ["AdapterStore", "StoreFull", "PagedKVAllocator",
+           "ContinuousBatcher", "Request", "synthetic_adapters"]

@@ -1,0 +1,192 @@
+"""Bounded multi-tenant adapter residency: the HBM tier of LoRA serving.
+
+An :class:`AdapterStore` owns the *stacked* serving parameter tree: every
+LoRA pair of the base model is widened to ``a: [R, d_in, r]`` /
+``b: [R, r, d_out]`` for ``R = capacity`` resident adapter slots, while the
+frozen leaves (``w`` dense or int8 ``{"q","scale"}``, biases, norms,
+embeddings) are shared across all tenants — one base model, ``R`` deltas.
+The stacked tree is exactly what the grouped decode path consumes
+(:func:`repro.models.layers.apply_linear` with ``adapter_tiles`` routing,
+backed by ``kernels/lora_grouped.py``).
+
+Residency is LRU with pinning: slots referenced by running requests are
+pinned and never evicted; an insert into a full store evicts the
+least-recently-used *unpinned* tenant or raises :class:`StoreFull`. Writes
+are functional ``.at[slot].set`` updates keyed by parameter path, so a
+quantized base (whose ``w`` leaves are ``{"q","scale"}`` dicts) and a plain
+adapter tree compose without structure surgery — and because slot writes
+only change leaf *values*, admission never retraces the jitted decode step.
+
+Byte accounting (``slot_bytes`` / ``allocated_bytes``) feeds the serve-side
+memory simulator (``benchmarks/memsim.serve_residency``) and the batcher's
+admission headroom check.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+
+
+class StoreFull(RuntimeError):
+    """Insert needed but every resident slot is pinned by a live request."""
+
+
+def _adapter_leaves(tree) -> Dict[str, jax.Array]:
+    """Path-keyed LoRA leaves (final key 'a' or 'b') of a param tree."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        keys = [getattr(k, "key", None) for k in path]
+        if keys and keys[-1] in ("a", "b"):
+            out[jax.tree_util.keystr(path)] = leaf
+    return out
+
+
+def synthetic_adapters(params, seed: int, scale: float = 0.05):
+    """Deterministic per-tenant (A, B) tree for benchmarks/tests/demos:
+    every LoRA leaf redrawn from a ``fold_in``-derived subkey (B nonzero, so
+    tenants produce genuinely different deltas). Leaf order is path-sorted —
+    stable across processes, unlike ``hash``-keyed schemes."""
+    idx = {p: i for i, p in enumerate(sorted(_adapter_leaves(params)))}
+    base = jax.random.PRNGKey(seed)
+
+    def draw(path, leaf):
+        i = idx.get(jax.tree_util.keystr(path))
+        if i is None:
+            return leaf
+        k = jax.random.fold_in(base, i)
+        return (scale * jax.random.normal(k, leaf.shape)).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(draw, params)
+
+
+class AdapterStore:
+    """LRU-bounded resident set of per-tenant LoRA (A, B) pairs.
+
+    ``params``: the base model tree (``model.init_params``; its own a/b
+    values are *not* served — slots start zeroed, i.e. identity deltas).
+    ``capacity``: number of resident tenants R.
+    """
+
+    def __init__(self, params, capacity: int):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._paths = set(_adapter_leaves(params))
+        if not self._paths:
+            raise ValueError("base params carry no LoRA (a, b) leaves")
+        if any("moe" in p for p in self._paths):
+            raise ValueError(
+                "multi-tenant AdapterStore does not support per-expert MoE "
+                "adapters (expert stacks already consume the group axis); "
+                "serve dense/vlm archs")
+        # tenant axis goes just BEFORE the trailing (d_in, r)/(r, d_out)
+        # matrix dims: any leading dims are layer/group stacking that the
+        # decode scan slices away first, leaving [R, ., .] per layer —
+        # the shape apply_linear's stacked-adapter branch routes on.
+        mask = model_lib.trainable_mask(params)
+        self.params = jax.tree_util.tree_map(
+            lambda p, m: jnp.zeros(
+                p.shape[:-2] + (capacity,) + p.shape[-2:], p.dtype)
+            if m else p, params, mask)
+        self._slot_of: "OrderedDict[str, int]" = OrderedDict()  # LRU order
+        self._free = list(range(capacity - 1, -1, -1))          # pop() -> 0,1,..
+        self._pins: Dict[str, int] = {}
+        self.counters = {"hits": 0, "misses": 0, "evictions": 0,
+                         "inserts": 0}
+
+    # -- byte accounting ----------------------------------------------------
+
+    @property
+    def slot_bytes(self) -> int:
+        """Bytes one resident adapter occupies (its a/b leaves)."""
+        flat = _adapter_leaves(self.params)
+        return sum(l.size // self.capacity * l.dtype.itemsize
+                   for l in flat.values())
+
+    @property
+    def allocated_bytes(self) -> int:
+        """Bytes of the full stacked a/b allocation (capacity slots,
+        preallocated — residency is which slots hold live tenants)."""
+        return self.slot_bytes * self.capacity
+
+    @property
+    def resident(self) -> int:
+        return len(self._slot_of)
+
+    def pinned(self, uid: str) -> bool:
+        return self._pins.get(uid, 0) > 0
+
+    # -- residency ----------------------------------------------------------
+
+    def lookup(self, uid: str) -> Optional[int]:
+        return self._slot_of.get(uid)
+
+    def can_admit(self, uid: str) -> bool:
+        """Would :meth:`acquire` succeed without raising StoreFull? (Cheap
+        pre-check so a batcher can reject before touching LRU counters.)"""
+        return (uid in self._slot_of or bool(self._free)
+                or any(not self.pinned(u) for u in self._slot_of))
+
+    def acquire(self, uid: str, adapters=None, *, pin: bool = True) -> int:
+        """Slot of ``uid``, inserting (and LRU-evicting) on miss.
+
+        ``adapters``: tree holding the tenant's a/b leaves at the base
+        model's paths (a full ``init_params`` tree works) — required on a
+        miss. ``pin`` guards the slot against eviction until the matching
+        :meth:`release`.
+        """
+        slot = self._slot_of.get(uid)
+        if slot is not None:
+            self.counters["hits"] += 1
+            self._slot_of.move_to_end(uid)
+        else:
+            self.counters["misses"] += 1
+            if adapters is None:
+                raise KeyError(f"adapter {uid!r} not resident and no "
+                               "adapter tree supplied")
+            slot = self._insert(uid, adapters)
+        if pin:
+            self._pins[uid] = self._pins.get(uid, 0) + 1
+        return slot
+
+    def release(self, uid: str) -> None:
+        n = self._pins.get(uid, 0)
+        if n <= 1:
+            self._pins.pop(uid, None)
+        else:
+            self._pins[uid] = n - 1
+
+    def _insert(self, uid: str, adapters) -> int:
+        if self._free:
+            slot = self._free.pop()
+        else:
+            victim = next((u for u in self._slot_of if not self.pinned(u)),
+                          None)
+            if victim is None:
+                raise StoreFull(
+                    f"all {self.capacity} resident adapters are pinned")
+            slot = self._slot_of.pop(victim)
+            self.counters["evictions"] += 1
+        leaves = _adapter_leaves(adapters)
+        missing = self._paths - set(leaves)
+        if missing:
+            raise ValueError(f"adapter {uid!r} missing LoRA leaves: "
+                             f"{sorted(missing)}")
+
+        def write(path, stacked):
+            leaf = leaves.get(jax.tree_util.keystr(path))
+            if leaf is None:
+                return stacked
+            return stacked.at[..., slot, :, :].set(
+                leaf.astype(stacked.dtype))
+
+        self.params = jax.tree_util.tree_map_with_path(write, self.params)
+        self._slot_of[uid] = slot
+        self.counters["inserts"] += 1
+        return slot

@@ -1,0 +1,235 @@
+"""Multi-tenant serving subsystem (``repro.serve``) end-to-end.
+
+Covers the three components and their composition:
+
+* :class:`AdapterStore` — LRU residency, pinning, eviction, the stacked
+  tenant-axis layout the grouped decode path consumes, byte accounting;
+* :class:`PagedKVAllocator` — reserve/free ledger, rejection, peak tracking;
+* :class:`ContinuousBatcher` — admission counters, recycling, and the two
+  correctness contracts: a request's token stream is *identical* under any
+  arrival interleaving (placement independence), and equals the
+  single-request scalar-decode oracle run with that tenant's adapters
+  merged into a plain (unstacked) parameter tree.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve import (AdapterStore, ContinuousBatcher, PagedKVAllocator,
+                         Request, StoreFull, synthetic_adapters)
+
+CFG = get_config("qwen2.5-0.5b").reduced()
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _batcher(params, n_tenants=4, capacity=3, slots=8, tile=2, max_len=32):
+    store = AdapterStore(params, capacity=capacity)
+    bat = ContinuousBatcher(CFG, store, slots=slots, tile=tile,
+                            max_len=max_len, page_size=8)
+    for i in range(n_tenants):
+        bat.register_adapter(f"u{i}", synthetic_adapters(params, i))
+    return bat, store
+
+
+def _reqs(n, n_tenants, prompt_len=3, max_new=5):
+    return [Request(f"r{i}", f"u{i % n_tenants}",
+                    tuple(1 + (2 * i + j) % 89 for j in range(prompt_len)),
+                    max_new) for i in range(n)]
+
+
+# ---------------------------------------------------------------- allocator
+
+
+def test_paged_allocator_ledger():
+    al = PagedKVAllocator(n_pages=4, page_size=8)
+    assert al.pages_for(1) == 1 and al.pages_for(8) == 1
+    assert al.pages_for(9) == 2
+    assert al.reserve("a", 17)                 # 3 pages
+    assert al.used_pages == 3 and al.free_tokens == 8
+    assert not al.reserve("b", 9)              # needs 2, only 1 free
+    assert al.counters["rejected"] == 1
+    assert al.reserve("b", 8)
+    assert al.counters["peak_pages"] == 4
+    with pytest.raises(KeyError):
+        al.reserve("a", 1)                     # double reservation
+    al.free("a")
+    assert al.used_pages == 1 and al.counters["freed"] == 3
+    assert al.can_reserve(24)
+
+
+# -------------------------------------------------------------------- store
+
+
+def test_store_stacks_tenant_axis_before_matrix_dims(params):
+    store = AdapterStore(params, capacity=3)
+    blk = store.params["blocks"]["attn"]["q"]
+    base = params["blocks"]["attn"]["q"]
+    # layer-stacked [L, d, r] -> [L, R, d, r]: scan slices layers first,
+    # leaving the [R, ., .] shape apply_linear routes on
+    assert blk["a"].shape == base["a"].shape[:-2] + (3,) + base["a"].shape[-2:]
+    assert blk["w"].shape == base["w"].shape        # frozen leaves shared
+    assert store.slot_bytes > 0
+    assert store.allocated_bytes == 3 * store.slot_bytes
+
+
+def test_store_lru_eviction_and_pinning(params):
+    store = AdapterStore(params, capacity=2)
+    adapters = {u: synthetic_adapters(params, i)
+                for i, u in enumerate(["u0", "u1", "u2"])}
+    s0 = store.acquire("u0", adapters["u0"], pin=False)
+    store.acquire("u1", adapters["u1"], pin=False)
+    store.acquire("u0", adapters["u0"], pin=False)     # refresh u0's recency
+    assert store.counters["hits"] == 1
+    s2 = store.acquire("u2", adapters["u2"], pin=False)
+    assert s2 == store._slot_of["u2"]
+    assert store.lookup("u1") is None                  # u1 was LRU, evicted
+    assert store.lookup("u0") == s0                    # u0 survived
+    assert store.counters["evictions"] == 1
+    # slot content actually belongs to the new tenant
+    a_stack = store.params["blocks"]["attn"]["q"]["a"]
+    want = adapters["u2"]["blocks"]["attn"]["q"]["a"]
+    np.testing.assert_array_equal(np.asarray(a_stack[:, s2]),
+                                  np.asarray(want))
+
+
+def test_store_pin_blocks_eviction(params):
+    store = AdapterStore(params, capacity=2)
+    store.acquire("u0", synthetic_adapters(params, 0))          # pinned
+    store.acquire("u1", synthetic_adapters(params, 1))          # pinned
+    assert not store.can_admit("u2")
+    with pytest.raises(StoreFull):
+        store.acquire("u2", synthetic_adapters(params, 2))
+    store.release("u1")
+    assert store.can_admit("u2")
+    store.acquire("u2", synthetic_adapters(params, 2))
+    assert store.lookup("u1") is None
+
+
+def test_store_rejects_moe_and_missing_leaves(params):
+    moe_cfg = get_config("olmoe-1b-7b").reduced()
+    moe_params = M.init_params(jax.random.PRNGKey(0), moe_cfg)
+    with pytest.raises(ValueError, match="MoE"):
+        AdapterStore(moe_params, capacity=2)
+    with pytest.raises(ValueError, match="missing LoRA"):
+        AdapterStore(params, capacity=1).acquire(
+            "u0", {"blocks": {}})
+
+
+def test_synthetic_adapters_deterministic_and_distinct(params):
+    a0 = synthetic_adapters(params, 0)
+    a0b = synthetic_adapters(params, 0)
+    a1 = synthetic_adapters(params, 1)
+    leaf = lambda t: t["blocks"]["attn"]["q"]["a"]
+    np.testing.assert_array_equal(np.asarray(leaf(a0)), np.asarray(leaf(a0b)))
+    assert float(jnp.abs(leaf(a0) - leaf(a1)).max()) > 0
+    # frozen leaves pass through untouched
+    np.testing.assert_array_equal(
+        np.asarray(a0["blocks"]["attn"]["q"]["w"]),
+        np.asarray(params["blocks"]["attn"]["q"]["w"]))
+
+
+# ----------------------------------------------------------------- batcher
+
+
+def test_serve_end_to_end_counters(params):
+    bat, store = _batcher(params, n_tenants=4, capacity=3)
+    reqs = _reqs(8, 4)
+    results = bat.run(reqs)
+    assert set(results) == {r.rid for r in reqs}
+    assert all(len(v) == 5 for v in results.values())
+    c = bat.counters
+    assert c["admitted"] == c["completed"] == 8
+    assert c["decoded_tokens"] == 8 * 5
+    assert c["prefill_tokens"] == 8 * 3
+    assert store.counters["evictions"] >= 1        # 4 tenants, 3 slots
+    assert bat.alloc.used_pages == 0               # everything recycled
+    assert bat.alloc.counters["reserved"] == bat.alloc.counters["freed"]
+    assert bat.active == 0 and not bat.queue
+
+
+def test_serve_deterministic_across_interleavings(params):
+    reqs = _reqs(8, 4)
+    streams = []
+    for order in (reqs, list(reversed(reqs)), reqs[1::2] + reqs[0::2]):
+        bat, _ = _batcher(params, n_tenants=4, capacity=3)
+        streams.append(bat.run(order))
+    for rid in streams[0]:
+        assert streams[0][rid] == streams[1][rid] == streams[2][rid], rid
+
+
+def test_serve_matches_scalar_decode_oracle(params):
+    """Each served stream equals a single-request greedy decode with the
+    tenant's adapters merged into a plain (unstacked) tree — no batching,
+    no grouped kernel, no store."""
+    from repro.serve.store import _adapter_leaves
+    bat, _ = _batcher(params, n_tenants=3, capacity=3)
+    reqs = _reqs(5, 3, prompt_len=4, max_new=4)
+    results = bat.run(reqs)
+
+    def merged(adapters):
+        leaves = _adapter_leaves(adapters)
+
+        def pick(path, leaf):
+            return leaves.get(jax.tree_util.keystr(path), leaf)
+        return jax.tree_util.tree_map_with_path(pick, params)
+
+    step = jax.jit(lambda p, c, t: M.decode_step(p, CFG, c, t))
+    for req in reqs:
+        p = merged(synthetic_adapters(params, int(req.adapter[1:])))
+        cache = M.init_cache(CFG, 1, 32)
+        out = []
+        tok = None
+        for t in req.prompt:
+            logits, cache = step(p, cache, jnp.asarray([[t]], jnp.int32))
+            tok = int(jnp.argmax(logits[0, 0]))
+        out.append(tok)
+        while len(out) < req.max_new:
+            logits, cache = step(p, cache,
+                                 jnp.asarray([[out[-1]]], jnp.int32))
+            out.append(int(jnp.argmax(logits[0, 0])))
+        assert results[req.rid] == out, req.rid
+
+
+def test_serve_admission_rejections(params):
+    # 1 tile of 2 rows, 2 pages: the second tenant cannot co-reside
+    store = AdapterStore(params, capacity=1)
+    bat = ContinuousBatcher(CFG, store, slots=2, tile=2, max_len=16,
+                            page_size=8)
+    for i in range(2):
+        bat.register_adapter(f"u{i}", synthetic_adapters(params, i))
+    reqs = _reqs(4, 2, prompt_len=2, max_new=3)
+    results = bat.run(reqs)
+    assert len(results) == 4                       # all drain eventually
+    c = bat.counters
+    assert c["rejected_tiles"] > 0                 # u1 waited for the tile
+    assert store.counters["evictions"] >= 1
+
+
+def test_serve_validates_requests(params):
+    bat, _ = _batcher(params, max_len=16)
+    with pytest.raises(ValueError, match="max_len"):
+        bat.submit(Request("big", "u0", tuple(range(1, 10)), 10))
+    with pytest.raises(KeyError, match="not registered"):
+        bat.submit(Request("x", "nobody", (1, 2), 2))
+    with pytest.raises(ValueError, match="multiple"):
+        ContinuousBatcher(CFG, AdapterStore(params, 1), slots=5, tile=2)
+
+
+def test_per_slot_cache_unsupported_families():
+    cfg = get_config("rwkv6-1.6b").reduced()
+    with pytest.raises(ValueError, match="per_slot"):
+        M.init_cache(cfg, 2, 16, per_slot=True)
+    moe_cfg = get_config("olmoe-1b-7b").reduced()
+    moe_params = M.init_params(jax.random.PRNGKey(0), moe_cfg)
+    cache = M.init_cache(moe_cfg, 2, 16, per_slot=True)   # moe cache is fine
+    with pytest.raises(ValueError, match="adapter routing unsupported"):
+        M.decode_step(moe_params, moe_cfg, cache,
+                      jnp.ones((2, 1), jnp.int32),
+                      adapter_tiles=jnp.zeros(1, jnp.int32))
