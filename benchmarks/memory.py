@@ -59,9 +59,11 @@ def measure(arch: str, engine: str, seq: int, batch: int = 1,
     engine: any registered engine name (``repro.api.engine_names()``); the
     step is built from the registration's ``value_and_grad`` hook, so a
     newly registered engine is measurable with no edits here.
-    quantize: None | "int8" — frozen base weights held as {q, scale} leaves;
-    shows up in ``arg_mb`` (weight bytes halve) and, on non-pallas engines,
-    in ``temp_mb`` via the dequant workspaces.
+    quantize: None or a ``core.quant.METHODS`` entry — "int8" holds frozen
+    base weights as {q, scale} leaves (weight bytes halve); packed
+    "int4"/"nf4" hold them as {q4, scale, ...} nibble-packed leaves (weight
+    bytes quarter). Shows up in ``arg_mb`` and, on non-pallas engines, in
+    ``temp_mb`` via the dequant workspaces.
     """
     key = f"{arch}|{engine}|{seq}|{batch}|r{rank}" + \
         (f"|{quantize}" if quantize else "")

@@ -1,0 +1,101 @@
+"""Committed HBM-residency tables -> BENCH_memory.json (the CI memory gate).
+
+Pure-analytic counterpart of ``benchmarks/serving.py``'s ``run_and_write``:
+every number comes from ``benchmarks/memsim``'s shape arithmetic — no jax
+compute, no wall-clock, no interpreter caveats — so the committed table is
+bit-reproducible on any host and ``scripts/check_bench_regression.py
+--memory`` can gate it hard.
+
+Three sections per run:
+
+* ``models``  — per paper model: ``resident_weight_mb`` for every weights
+  format ``core/quant.weights_format`` knows (bf16 / int8 / packed int4 /
+  nf4), the ratio of each vs bf16 (the figures the gate's 0.55×/0.30×
+  ceilings check), and the MeSP train-peak total per format;
+* ``serving`` — the serve-side residency split (``memsim.serve_residency``)
+  per format at the BENCH_serving.json setting, showing how the packed
+  formats move the weights/adapters/KV balance of the resident set;
+* ``formats`` — the swept format list, generated from ``core.quant.METHODS``
+  so a newly registered quantize method joins the table (and the gate) with
+  zero edits here.
+
+    PYTHONPATH=src python -m benchmarks.memory_table
+    PYTHONPATH=src python scripts/check_bench_regression.py \\
+        --memory benchmarks/results/BENCH_memory.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks import memsim
+from repro.configs import get_config
+from repro.core import quant
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+DEFAULT_OUT = os.path.join(RESULTS_DIR, "BENCH_memory.json")
+
+MODELS = ("qwen2.5-0.5b", "qwen2.5-1.5b", "qwen2.5-3b")
+
+#: mirrors benchmarks/serving.py's SETTING (capacity/slots/max_len/page_size)
+SERVE = {"arch": "qwen2.5-0.5b", "rank": 8, "resident_adapters": 4,
+         "slots": 4, "max_len": 128, "page_size": 16}
+
+
+def build(models=MODELS, seq: int = 256) -> dict:
+    fmts = [quant.weights_format(m) for m in quant.METHODS]  # bf16 first
+    rows = {}
+    for arch in models:
+        cfg = get_config(arch)
+        w = {f: memsim.resident_weight_mb(cfg, f) for f in fmts}
+        rows[arch] = {
+            "resident_weight_mb": w,
+            "ratio_vs_bf16": {f: w[f] / w["bf16"] for f in fmts[1:]},
+            # embedding-free ratio over the bytes the format controls — the
+            # column the --memory gate's 0.55x/0.30x ceilings check
+            "quantized_ratio_vs_bf16": {
+                f: memsim.quantized_weight_ratio(cfg, f)
+                for f in fmts[1:]},
+            "mesp_total_mb": {
+                f: memsim.simulate(arch, "mesp", seq,
+                                   weights_fmt=f).total_mb
+                for f in fmts},
+        }
+    serve = {
+        f: memsim.serve_residency(
+            SERVE["arch"], rank=SERVE["rank"],
+            resident_adapters=SERVE["resident_adapters"],
+            kv_pages=SERVE["slots"] * SERVE["max_len"] // SERVE["page_size"],
+            page_size=SERVE["page_size"], batch=SERVE["slots"],
+            weights_fmt=f)
+        for f in fmts}
+    return {"formats": fmts, "seq": seq, "models": rows,
+            "serving": {"setting": dict(SERVE), "residency": serve}}
+
+
+def run_and_write(out: str = DEFAULT_OUT) -> dict:
+    result = build()
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(result, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+    result = run_and_write(args.out)
+    for arch, row in result["models"].items():
+        ratios = " ".join(f"{f}={r:.3f}"
+                          for f, r in sorted(row["ratio_vs_bf16"].items()))
+        print(f"{arch}: W0 bf16 "
+              f"{row['resident_weight_mb']['bf16']:.1f} MB; ratios {ratios}")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -96,8 +96,12 @@ def resident_weight_mb(cfg: ArchConfig, fmt: str = "bf16") -> float:
       scales. No dequant workspace is charged: the pallas kernel path
       (``kernels/lora_quant.py``) dequantizes tile-wise in VMEM, never
       materializing a dense W0 in HBM.
+    * ``int4`` / ``nf4`` — packed two-nibbles-per-byte format
+      (``kernels/lora_pack4.py``): 0.5 B/param + the same f32 scale rows
+      (the scale count is per output channel, independent of weight width).
+      The nf4 16-entry codebook is 64 B per model — noise, not charged.
 
-    Embeddings (and the untied head) stay bf16 in both formats —
+    Embeddings (and the untied head) stay bf16 in every format —
     ``quantize_frozen`` only rewrites ``w`` leaves.
     """
     lin = _block_linear_params(cfg) * cfg.n_layers
@@ -106,6 +110,30 @@ def resident_weight_mb(cfg: ArchConfig, fmt: str = "bf16") -> float:
         return (lin + emb) * BF16 / 2**20
     if fmt == "int8":
         return (lin * INT8 + _scale_count(cfg) * F32 + emb * BF16) / 2**20
+    if fmt in ("int4", "nf4"):
+        return (lin * W4 + _scale_count(cfg) * F32 + emb * BF16) / 2**20
+    raise ValueError(fmt)
+
+
+def quantized_weight_ratio(cfg: ArchConfig, fmt: str = "bf16") -> float:
+    """Resident bytes of the *quantizable* linear stack vs its bf16 bytes.
+
+    ``resident_weight_mb`` ratios are diluted by the embeddings (and untied
+    head), which stay bf16 in every format — on small-vocab-heavy models
+    (0.5B: the tied embedding is ~30% of all params) the whole-model ratio
+    floors well above the format's own compression. This isolates the bytes
+    the format actually controls: ideal 0.5× for int8 and 0.25× for the
+    packed 4-bit formats, plus the f32 scale rows (~2/d_model relative
+    overhead). ``scripts/check_bench_regression.py --memory`` gates on it.
+    """
+    lin = _block_linear_params(cfg) * cfg.n_layers
+    base = lin * BF16
+    if fmt == "bf16":
+        return 1.0
+    if fmt == "int8":
+        return (lin * INT8 + _scale_count(cfg) * F32) / base
+    if fmt in ("int4", "nf4"):
+        return (lin * W4 + _scale_count(cfg) * F32) / base
     raise ValueError(fmt)
 
 

@@ -294,38 +294,48 @@ def kernels_bench(steps: int = 3):
 
 # ------------------------------------------------------------------ quant
 def table_quant():
-    """Quantized base weights (paper §4.5): int8 W0 on top of MeSP.
+    """Quantized base weights (paper §4.5): int8 / packed int4 / nf4 W0.
 
-    Sim columns use the HBM-resident weight accounting
+    The format sweep is generated from ``core.quant.METHODS`` (a newly
+    registered quantize method becomes a column with zero edits here). Sim
+    columns use the HBM-resident weight accounting
     (``memsim.resident_weight_mb``) for the paper models; the XLA column
-    AOT-compiles the reduced 0.5B-family config with/without ``quantize``
-    and reports argument (weight+input) bytes — the quantity the int8
-    format halves. Activation terms are MeSP's and unchanged by W0 format.
+    AOT-compiles the reduced 0.5B-family config per ``quantize`` method and
+    reports argument (weight+input) bytes — the quantity the packed formats
+    shrink. Activation terms are MeSP's and unchanged by W0 format.
     """
     from benchmarks.memory import measure
     from benchmarks.memsim import resident_weight_mb, simulate
     from repro.configs import get_config
-    report("## Quantized base weights — MeSP + int8 W0 "
-           "(dequant-in-VMEM kernels) vs bf16 W0, seq 256")
-    report("| model | W0 bf16 MB | W0 int8 MB | total bf16 MB | "
-           "total int8 MB | W0 red. | total red. |")
-    report("|---|---|---|---|---|---|---|")
+    from repro.core import quant
+    fmts = [quant.weights_format(m) for m in quant.METHODS]  # bf16 first
+    report("## Quantized base weights — MeSP + int8/int4/nf4 W0 "
+           "(dequant-in-VMEM / nibble-unpack kernels) vs bf16 W0, seq 256")
+    report("| model | " + " | ".join(f"W0 {f} MB" for f in fmts)
+           + " | " + " | ".join(f"{f}/bf16" for f in fmts[1:])
+           + " | total bf16 MB | total nf4 MB |")
+    # columns: model + |fmts| W0 + |fmts|-1 ratios + 2 totals
+    report("|---" * (2 * len(fmts) + 2) + "|")
     for arch in PAPER_MODELS:
-        wb = resident_weight_mb(get_config(arch), "bf16")
-        wq = resident_weight_mb(get_config(arch), "int8")
+        cfg = get_config(arch)
+        w = {f: resident_weight_mb(cfg, f) for f in fmts}
         tb = simulate(arch, "mesp", 256, weights_fmt="bf16").total_mb
-        tq = simulate(arch, "mesp", 256, weights_fmt="int8").total_mb
-        emit(f"quant/{arch}/int8_weights_mb", f"{wq:.1f}",
-             f"bf16={wb:.1f} total_int8={tq:.1f}")
-        report(f"| {arch} | {wb:.0f} | {wq:.0f} | {tb:.0f} | {tq:.0f} | "
-               f"{1 - wq / wb:.0%} | {1 - tq / tb:.0%} |")
+        tq = simulate(arch, "mesp", 256, weights_fmt=fmts[-1]).total_mb
+        for f in fmts[1:]:
+            emit(f"quant/{arch}/{f}_weights_mb", f"{w[f]:.1f}",
+                 f"bf16={w['bf16']:.1f} ratio={w[f] / w['bf16']:.3f}")
+        report("| " + arch + " | "
+               + " | ".join(f"{w[f]:.0f}" for f in fmts) + " | "
+               + " | ".join(f"{w[f] / w['bf16']:.2f}" for f in fmts[1:])
+               + f" | {tb:.0f} | {tq:.0f} |")
     xb = measure("qwen2.5-0.5b", "mesp", seq=256)
-    xq = measure("qwen2.5-0.5b", "mesp", seq=256, quantize="int8")
-    emit("quant/qwen2.5-0.5b/xla_arg_mb", f"{xq['arg_mb']:.1f}",
-         f"bf16={xb['arg_mb']:.1f}")
-    report(f"\nXLA AOT cross-check (qwen2.5-0.5b, mesp): argument bytes "
-           f"{xb['arg_mb']:.0f} MB (bf16 W0) → {xq['arg_mb']:.0f} MB "
-           f"(int8 W0), {1 - xq['arg_mb'] / xb['arg_mb']:.0%} lower.")
+    for m in quant.METHODS[1:]:
+        xq = measure("qwen2.5-0.5b", "mesp", seq=256, quantize=m)
+        emit(f"quant/qwen2.5-0.5b/xla_arg_mb_{m}", f"{xq['arg_mb']:.1f}",
+             f"bf16={xb['arg_mb']:.1f}")
+        report(f"\nXLA AOT cross-check (qwen2.5-0.5b, mesp): argument bytes "
+               f"{xb['arg_mb']:.0f} MB (bf16 W0) → {xq['arg_mb']:.0f} MB "
+               f"({m} W0), {1 - xq['arg_mb'] / xb['arg_mb']:.0%} lower.")
 
 
 # ---------------------------------------------------------------- serving

@@ -1,12 +1,18 @@
 """Quickstart: MeSP LoRA fine-tuning in ~50 lines, via ``repro.api``.
 
 Builds a reduced Qwen2.5-family model, verifies the paper's structured
-gradients match framework autodiff exactly — and that the int8-quantized
-pallas kernel path matches its dequant oracle — then fine-tunes the LoRA
-adapters through the Trainer facade.
+gradients match framework autodiff exactly — and that the quantized pallas
+kernel path matches its dequant oracle — then fine-tunes the LoRA adapters
+through the Trainer facade.
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --quantize nf4
+
+``--quantize`` picks the frozen-W0 format for the sanity check *and* the
+fine-tune (any ``core.quant.METHODS`` entry: int8 dequant-in-VMEM, or the
+packed int4/nf4 nibble-unpack kernels from ``kernels/lora_pack4.py``).
 """
+import argparse
 import tempfile
 
 import jax
@@ -17,7 +23,16 @@ from repro.configs import get_config
 from repro.models import model as M
 
 
-def main():
+def main(argv=None):
+    from repro.core import quant
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quantize", default="int8",
+                    choices=[m for m in quant.METHODS if m != "none"],
+                    help="frozen-W0 format for the quantized sanity check "
+                         "and the fine-tune (default: int8)")
+    args = ap.parse_args(argv)
+
     # 1. a model config (any of the 13 registered archs; .reduced() for CPU)
     cfg = get_config("qwen2.5-0.5b").reduced()
     print(f"model: {cfg.name} (reduced) — {cfg.n_layers}L d={cfg.d_model} "
@@ -40,9 +55,11 @@ def main():
         jax.tree_util.tree_leaves(g_mesp), jax.tree_util.tree_leaves(g_mebp)))
     print(f"max |MeSP_grad − autodiff_grad| = {err:.2e}  (paper §5.5)")
 
-    # 3b. quantized base weights (--quantize int8): the dequant-in-VMEM
-    # kernel path agrees with the structured path on the same int8 W0
-    qparams = M.init_params(jax.random.PRNGKey(0), cfg, quantize="int8")
+    # 3b. quantized base weights: the quantized kernel path (int8
+    # dequant-in-VMEM, or int4/nf4 in-kernel nibble unpack) agrees with the
+    # structured path on the same quantized W0
+    qparams = M.init_params(jax.random.PRNGKey(0), cfg,
+                            quantize=args.quantize)
     _, g_q = mesp.value_and_grad(qparams, cfg, batch,
                                  policy=ExecutionPolicy(backend="pallas"))
     _, g_qs = mesp.value_and_grad(qparams, cfg, batch,
@@ -51,11 +68,14 @@ def main():
                                       jax.tree_util.tree_leaves(t)])
     rel = float(jnp.linalg.norm(flat(g_q) - flat(g_qs)) /
                 jnp.linalg.norm(flat(g_qs)))
-    print(f"int8 W0: pallas-kernel vs structured grad rel err = {rel:.2e}")
+    print(f"{args.quantize} W0: pallas-kernel vs structured grad "
+          f"rel err = {rel:.2e}")
     assert rel <= 1e-5, "quantized kernel path diverged from structured"
 
-    # 4. fine-tune: one declarative spec, one facade call
+    # 4. fine-tune: one declarative spec, one facade call (quantized W0 —
+    # only the LoRA factors train, so the frozen format just shrinks HBM)
     spec = TrainSpec(arch="qwen2.5-0.5b", reduced=True, engine="mesp",
+                     quantize=args.quantize,
                      lr=5e-2, steps=50, seq=64, batch=4,
                      ckpt_dir=tempfile.mkdtemp(prefix="repro_quickstart_"))
     result = Trainer.from_spec(spec).fit(

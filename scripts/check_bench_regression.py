@@ -32,6 +32,17 @@ collective-traffic floors (host-independent) are hard checks, the
 normalized step-time curve is bounded with generous slack — only an
 efficiency *collapse* (sharded program gone super-linear) fails CI.
 
+``--memory FRESH.json`` gates a fresh ``benchmarks/memory_table.py`` run
+against the committed ``BENCH_memory.json``. Everything in that table is
+pure shape arithmetic (``benchmarks/memsim``) — no wall-clock, no
+interpret-mode caveats — so every check is hard: (a) the quantized-stack
+residency ratios stay under the format ceilings (int8 ≤ 0.55× bf16, packed
+int4/nf4 ≤ 0.30× bf16 — ``MEMORY_CEILINGS``), (b) per-model
+``resident_weight_mb`` matches the committed table to ``MEMORY_DRIFT``
+(the accounting is deterministic; drift means the memory model changed
+without regenerating the baseline), and (c) the serving residency split
+covers every swept format.
+
 ``--serving FRESH.json`` gates a fresh ``benchmarks/serving.py`` run
 against the committed ``BENCH_serving.json``. Hard checks are the
 deterministic columns: the grouped-kernel schedule (live-tile count and
@@ -65,6 +76,18 @@ SCALING_BASELINE = (Path(__file__).resolve().parent.parent / "benchmarks" /
                     "results" / "BENCH_scaling.json")
 SERVING_BASELINE = (Path(__file__).resolve().parent.parent / "benchmarks" /
                     "results" / "BENCH_serving.json")
+MEMORY_BASELINE = (Path(__file__).resolve().parent.parent / "benchmarks" /
+                   "results" / "BENCH_memory.json")
+
+#: --memory ceilings on the quantized-stack residency ratio (vs bf16): the
+#: format's ideal compression (0.5x int8, 0.25x packed 4-bit) plus scale-row
+#: headroom. A format whose kernels stopped packing blows straight through.
+MEMORY_CEILINGS = {"int8": 0.55, "int4": 0.30, "nf4": 0.30}
+
+#: --memory fresh-vs-baseline tolerance: the table is pure shape arithmetic,
+#: so any drift beyond float noise means the memory model changed without
+#: the committed baseline being regenerated.
+MEMORY_DRIFT = 1e-6
 
 #: grouped-vs-loop max abs error ceiling for --serving (float32 comparators
 #: computing the same math — anything above this is a kernel bug, not noise)
@@ -321,6 +344,62 @@ def check_serving(fresh_doc: dict, base_doc: dict) -> list[str]:
     return errors
 
 
+def check_memory(fresh_doc: dict, base_doc: dict) -> list[str]:
+    """Gate the analytic HBM-residency table (``benchmarks/memory_table.py``).
+
+    All checks are hard — the table contains no measured quantity:
+      * per model and quantized format, ``quantized_ratio_vs_bf16`` must
+        stay under the ``MEMORY_CEILINGS`` ceiling (the format's promised
+        compression on the bytes it controls);
+      * per model and format, ``resident_weight_mb`` must match the
+        committed baseline to ``MEMORY_DRIFT`` relative — drift means the
+        memory model changed without regenerating the baseline;
+      * the serving residency section must carry a split (with weights_mb)
+        for every swept format.
+    """
+    errors = []
+    fresh_models = fresh_doc.get("models", {})
+    base_models = base_doc.get("models", {})
+    if not fresh_models:
+        return ["memory: fresh table has no models section — did "
+                "benchmarks/memory_table.py run?"]
+    for arch, row in sorted(fresh_models.items()):
+        for fmt, ceil in sorted(MEMORY_CEILINGS.items()):
+            r = row.get("quantized_ratio_vs_bf16", {}).get(fmt)
+            if r is None:
+                errors.append(f"memory {arch}: no quantized ratio for "
+                              f"{fmt} — format dropped from the sweep?")
+            elif r > ceil:
+                errors.append(f"memory {arch}: {fmt} quantized-stack ratio "
+                              f"{r:.4f} exceeds the {ceil:.2f}x ceiling — "
+                              f"packing regressed")
+            else:
+                print(f"OK: memory {arch} {fmt} ratio {r:.4f} "
+                      f"(ceiling {ceil:.2f})")
+        base_w = base_models.get(arch, {}).get("resident_weight_mb", {})
+        for fmt, mb in sorted(row.get("resident_weight_mb", {}).items()):
+            b = base_w.get(fmt)
+            if b is None:
+                print(f"   memory {arch} {fmt}: {mb:.1f} MB "
+                      f"(no baseline entry — new format/model)")
+            elif abs(mb - b) > MEMORY_DRIFT * max(abs(b), 1.0):
+                errors.append(f"memory {arch} {fmt}: resident "
+                              f"{mb:.4f} MB vs committed {b:.4f} MB — "
+                              f"model changed, regenerate the baseline")
+    fmts = fresh_doc.get("formats", [])
+    resid = fresh_doc.get("serving", {}).get("residency", {})
+    missing = [f for f in fmts
+               if "weights_mb" not in resid.get(f, {})]
+    if missing:
+        errors.append(f"memory: serving residency split missing for "
+                      f"format(s) {missing}")
+    elif fmts:
+        parts = ", ".join(f"{f}={resid[f]['weights_mb']:.0f}" for f in fmts)
+        print(f"OK: serving residency split covers all formats "
+              f"(weights MB: {parts})")
+    return errors
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("fresh", nargs="?", default=None,
@@ -345,12 +424,18 @@ def main(argv=None) -> int:
                          "committed baseline (schedule + equivalence + "
                          "completion hard; tokens/s annotate-only)")
     ap.add_argument("--serving-baseline", default=str(SERVING_BASELINE))
+    ap.add_argument("--memory", default=None, metavar="FRESH_JSON",
+                    help="gate a fresh BENCH_memory.json against the "
+                         "committed baseline (all hard: format residency "
+                         "ceilings + drift + serving split coverage)")
+    ap.add_argument("--memory-baseline", default=str(MEMORY_BASELINE))
     args = ap.parse_args(argv)
     if args.fresh is None and args.gradquality is None \
             and args.resilience is None and args.scaling is None \
-            and args.serving is None:
+            and args.serving is None and args.memory is None:
         ap.error("nothing to do: pass a fresh BENCH_kernels.json, "
-                 "--gradquality, --resilience, --scaling, and/or --serving")
+                 "--gradquality, --resilience, --scaling, --serving, "
+                 "and/or --memory")
 
     errors = []
     if args.fresh is not None:
@@ -405,6 +490,19 @@ def main(argv=None) -> int:
             print("OK: serving schedule/equivalence/completion within "
                   "tolerance of the baseline")
         errors += sv_errors
+
+    if args.memory is not None:
+        with open(args.memory) as f:
+            mem_fresh = json.load(f)
+        with open(args.memory_baseline) as f:
+            mem_base = json.load(f)
+        mem_errors = check_memory(mem_fresh, mem_base)
+        for e in mem_errors:
+            print(f"FAIL: {e}")
+        if not mem_errors:
+            print("OK: memory table within the format ceilings and "
+                  "matching the committed baseline")
+        errors += mem_errors
 
     return 1 if errors else 0
 

@@ -16,7 +16,8 @@ over by jitted step functions, never traced.  Fields:
     - ``plain``      — framework autodiff (MeBP baseline),
     - ``store_h``    — MeSP with ``h = x@A`` stored (paper Table 5 ablation).
 * ``quantize``      — frozen-W0 format the params were initialised with
-  (``none`` | ``int8``); carried so engines/launchers can validate support.
+  (a ``core.quant.METHODS`` entry: ``none`` | ``int8`` | packed ``int4`` |
+  ``nf4``); carried so engines/launchers can validate support.
 * ``act_spec``      — block-boundary activation sharding constraint
   (a ``PartitionSpec``), or None.
 * ``flash_min_seq`` — sequence length at/above which the structured backend

@@ -71,7 +71,8 @@ def _ensure_builtins():
 
 
 def register_engine(name: str, *, description: str, backend: Optional[str],
-                    quantize: Tuple[str, ...] = ("none", "int8"),
+                    quantize: Tuple[str, ...] = ("none", "int8", "int4",
+                                                 "nf4"),
                     memsim: str = "mesp", value_and_grad=None,
                     benchmark: bool = True, paper: str = ""):
     """Decorator over the engine's step-builder.

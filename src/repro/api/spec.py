@@ -182,8 +182,8 @@ def build_arg_parser() -> argparse.ArgumentParser:
     ap.add_argument("--degrade", default=d.degrade, choices=["on", "off"],
                     help="on OOM, walk the memory-pressure degradation "
                          "ladder (halve batch -> leaner engine -> int8 W0 "
-                         "-> truncate seq) instead of retrying the same "
-                         "program")
+                         "-> packed int4 W0 -> truncate seq) instead of "
+                         "retrying the same program")
     ap.add_argument("--guard", default=d.guard, choices=["on", "off"],
                     help="reject (skip-and-rewind) steps with NaN/Inf loss "
                          "or update-norm spikes")

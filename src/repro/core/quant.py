@@ -1,19 +1,52 @@
-"""int8 frozen-weight quantization with on-the-fly dequantization.
+"""Quantized frozen base weights: int8 and packed sub-8-bit (int4 / nf4).
 
 The paper keeps base weights 4-bit quantized (QLoRA-style) and dequantizes on
-the fly (§4.5). TPUs have no native 4-bit datapath; the TPU-idiomatic
-equivalent is int8 symmetric per-output-channel quantization — weights halve
-HBM footprint/traffic vs bf16 and dequantize on the VPU in front of the MXU
-(DESIGN.md §2).
+the fly (§4.5). The TPU MXU has no sub-8-bit datapath, so the 4-bit formats
+store two nibbles per byte along the input dimension and unpack on the VPU in
+front of the MXU (shift/mask + sign-extend for ``int4``, 16-entry codebook
+lookup for ``nf4``); int8 remains the native-width path. In every quantized
+mode the dense float W0 exists only inside kernel VMEM — never in HBM
+(jaxpr-asserted in ``tests/test_quant_mode.py``).
 
 Only *frozen* weights quantize; LoRA factors stay bf16 (they are trained).
 The LoRA gradients are unaffected: the structured backward needs x and the
 dequantized W0 only through ``g @ W0ᵀ``, which uses the same dequant.
+
+Leaf formats produced by :func:`quantize_frozen` (plain dicts, so every
+path-keyed subsystem — checkpointer, sharding, adapter store, degradation
+ladder — composes without special cases):
+
+* int8:  ``{"q": int8 [..., K, N], "scale": f32 [..., 1, N]}``
+* int4:  ``{"q4": uint8 [..., ceil(K/2), N], "scale": f32 [..., 1, N]}``
+* nf4:   int4 layout plus ``"code": f32 [..., 16]`` (the dequant codebook —
+  its presence is also the method discriminator)
+
+``q4`` byte row ``j`` packs input rows ``2j`` (low nibble) and ``2j+1``
+(high nibble). Odd K pads the final high nibble with the encoding of 0.0
+(``0`` for int4 two's-complement, codebook index 7 for nf4) and adds a
+``"kpad": uint8 [..., 1]`` marker leaf whose *presence* records the parity,
+so the original K stays statically recoverable from the pytree alone. The
+``code``/``kpad`` leaves broadcast over the weight's leading batch dims so
+stacked block trees ([L, K, N] leaves) keep a uniform scan axis.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+#: Normal-float-4 codebook (QLoRA §3.1): the 16 quantiles of N(0, 1)
+#: renormalized to [-1, 1], with an exact zero at index 7. Kernels bake these
+#: constants in; the tree carries a copy in the leaf for oracle dequant.
+NF4_CODE = (
+    -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+    -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+    0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+    0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+    0.7229568362236023, 1.0,
+)
+#: Nibble value that dequantizes to 0.0 in each packed format (odd-K pad).
+INT4_ZERO_NIBBLE = 0
+NF4_ZERO_NIBBLE = 7
 
 
 def quantize_int8(w: jax.Array):
@@ -28,35 +61,173 @@ def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
-def quantize_frozen(params, *, skip_keys=("a", "b", "bias")):
-    """Quantize every frozen ≥2-D weight leaf; returns a new pytree where
-    quantized leaves become {"q": int8, "scale": f32} dicts."""
-    def one(path, leaf):
-        keys = [getattr(k, "key", None) for k in path]
-        if keys and keys[-1] in skip_keys:
-            return leaf
-        if getattr(leaf, "ndim", 0) >= 2 and keys and keys[-1] == "w":
-            q, s = quantize_int8(leaf)
-            return {"q": q, "scale": s}
-        return leaf
+# --------------------------------------------------------------- 4-bit pack
+def pack_nibbles(nibbles: jax.Array, *, pad_value: int = 0) -> jax.Array:
+    """[..., K, N] nibble values (0..15) -> [..., ceil(K/2), N] uint8.
 
-    return jax.tree_util.tree_map_with_path(one, params)
+    Byte row ``j`` holds input row ``2j`` in the low nibble and ``2j+1`` in
+    the high nibble; odd K appends one ``pad_value`` nibble."""
+    k = nibbles.shape[-2]
+    if k % 2:
+        pad = jnp.full(nibbles.shape[:-2] + (1, nibbles.shape[-1]),
+                       pad_value, jnp.uint8)
+        nibbles = jnp.concatenate([nibbles.astype(jnp.uint8), pad], axis=-2)
+    v = nibbles.astype(jnp.uint8)
+    lo, hi = v[..., 0::2, :], v[..., 1::2, :]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(packed: jax.Array, k: int | None = None) -> jax.Array:
+    """[..., ceil(K/2), N] uint8 -> [..., K, N] int32 nibble values (0..15).
+
+    ``k`` slices off the odd-K pad nibble; ``None`` returns all ``2*rows``."""
+    v = packed.astype(jnp.int32)
+    lo, hi = v & 0xF, v >> 4
+    both = jnp.stack([lo, hi], axis=-2)          # [..., rows, 2, N]
+    out = both.reshape(*packed.shape[:-2], -1, packed.shape[-1])
+    return out if k is None else out[..., :k, :]
+
+
+def sign_extend4(nibbles: jax.Array) -> jax.Array:
+    """Two's-complement sign extension of 4-bit values held in int32."""
+    return (nibbles ^ 8) - 8
+
+
+def quantize_int4(w: jax.Array):
+    """w: [..., K, N] -> (q4: uint8 [..., ceil(K/2), N], scale [..., 1, N]).
+
+    Symmetric per-output-channel: q ∈ [-7, 7], scale = absmax / 7."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 7.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -7, 7)
+    q4 = pack_nibbles(q.astype(jnp.int32) & 0xF, pad_value=INT4_ZERO_NIBBLE)
+    return q4, scale.astype(jnp.float32)
+
+
+def quantize_nf4(w: jax.Array):
+    """w: [..., K, N] -> (q4: uint8 [..., ceil(K/2), N], scale [..., 1, N]).
+
+    Per-output-channel absmax scaling to [-1, 1], then nearest-neighbour
+    assignment into the sorted :data:`NF4_CODE` book via its midpoints."""
+    code = jnp.asarray(NF4_CODE, jnp.float32)
+    mids = (code[1:] + code[:-1]) / 2.0
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8)
+    idx = jnp.searchsorted(mids, w.astype(jnp.float32) / scale)
+    q4 = pack_nibbles(idx.astype(jnp.int32), pad_value=NF4_ZERO_NIBBLE)
+    return q4, scale.astype(jnp.float32)
+
+
+def dequantize_packed(q4: jax.Array, scale: jax.Array, method: str,
+                      dtype=jnp.bfloat16, k: int | None = None):
+    """Packed q4 + scale -> dense [..., K, N] weights (the oracle path)."""
+    nib = unpack_nibbles(q4, k)
+    if method == "int4":
+        w = sign_extend4(nib).astype(jnp.float32)
+    elif method == "nf4":
+        w = jnp.asarray(NF4_CODE, jnp.float32)[nib]
+    else:
+        raise ValueError(f"unknown packed method {method!r}")
+    return (w * scale).astype(dtype)
+
+
+# ------------------------------------------------------------- leaf formats
+def quantize_leaf(w: jax.Array, method: str):
+    """Dense frozen weight -> quantized leaf dict for ``method``."""
+    if method == "int8":
+        q, s = quantize_int8(w)
+        return {"q": q, "scale": s}
+    if method in ("int4", "nf4"):
+        q4, s = (quantize_int4 if method == "int4" else quantize_nf4)(w)
+        leaf = {"q4": q4, "scale": s}
+        # code/kpad broadcast over w's leading batch dims (stacked block
+        # leaves are [L, K, N] and jax.lax.scan needs every leaf in the
+        # stacked tree to share the leading axis)
+        batch = w.shape[:-2]
+        if method == "nf4":
+            leaf["code"] = jnp.broadcast_to(
+                jnp.asarray(NF4_CODE, jnp.float32), batch + (16,))
+        if w.shape[-2] % 2:
+            leaf["kpad"] = jnp.ones(batch + (1,), jnp.uint8)
+        return leaf
+    raise ValueError(f"unknown quantize method {method!r}; "
+                     f"expected one of {METHODS[1:]}")
 
 
 def is_quantized(p) -> bool:
-    """True for a ``{"q", "scale"}`` quantized-weight leaf."""
+    """True for a ``{"q", "scale"}`` int8 quantized-weight leaf."""
     return isinstance(p, dict) and "q" in p and "scale" in p
+
+
+def is_packed(p) -> bool:
+    """True for a packed 4-bit ``{"q4", "scale"}`` quantized-weight leaf."""
+    return isinstance(p, dict) and "q4" in p and "scale" in p
+
+
+def packed_method(p) -> str:
+    """"int4" or "nf4" for a packed leaf (the codebook is the marker)."""
+    return "nf4" if "code" in p else "int4"
+
+
+def packed_k(p) -> int:
+    """Original (unpacked) input dimension of a packed leaf."""
+    return 2 * p["q4"].shape[-2] - (1 if "kpad" in p else 0)
 
 
 def maybe_dequant(p, dtype=jnp.bfloat16):
     """Resolve a (possibly quantized) linear weight leaf to a dense matrix."""
+    if is_packed(p):
+        return dequantize_packed(p["q4"], p["scale"], packed_method(p),
+                                 dtype, k=packed_k(p))
     if is_quantized(p):
         return dequantize_int8(p["q"], p["scale"], dtype)
     return p
 
 
+def add_group_axis(p):
+    """Expand a shared quantized base leaf with a leading group axis of 1
+    (the grouped-decode path's broadcast; ``code``/``kpad`` carry no group
+    axis and pass through)."""
+    if is_packed(p):
+        out = dict(p, q4=p["q4"][None], scale=p["scale"][None])
+        return out
+    return {"q": p["q"][None], "scale": p["scale"][None]}
+
+
+def quantize_frozen(params, *, method: str = "int8",
+                    skip_keys=("a", "b", "bias")):
+    """Quantize every frozen ≥2-D weight leaf; returns a new pytree where
+    quantized leaves become format dicts (see module docstring). Leaves that
+    are *already* quantized are dequantized and re-quantized, so the
+    degradation ladder's int8 → int4 transition is a plain re-call."""
+    def one(path, leaf):
+        keys = [getattr(k, "key", None) for k in path]
+        if keys and keys[-1] in skip_keys:
+            return leaf
+        if is_quantized(leaf) or is_packed(leaf):
+            leaf = maybe_dequant(leaf, jnp.float32)
+        if getattr(leaf, "ndim", 0) >= 2 and keys and keys[-1] == "w":
+            return quantize_leaf(leaf, method)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(
+        one, params, is_leaf=lambda p: is_quantized(p) or is_packed(p))
+
+
 #: ``--quantize`` values accepted by the launchers / init_params.
-METHODS = ("none", "int8")
+METHODS = ("none", "int8", "int4", "nf4")
+
+
+def weights_format(method) -> str:
+    """Map a ``--quantize`` method to the memsim/serve weights-format row.
+
+    The single choke point for format resolution: an unknown method raises
+    instead of silently falling back to bf16 accounting."""
+    m = "none" if method is None else method
+    if m not in METHODS:
+        raise ValueError(f"unknown quantize method {method!r}; "
+                         f"expected one of {METHODS}")
+    return "bf16" if m == "none" else m
 
 
 def quantize_params(params, method):
@@ -64,7 +235,7 @@ def quantize_params(params, method):
     no-op). The single entry point behind ``launch/train.py --quantize``."""
     if method is None or method == "none":
         return params
-    if method == "int8":
-        return quantize_frozen(params)
+    if method in ("int8", "int4", "nf4"):
+        return quantize_frozen(params, method=method)
     raise ValueError(f"unknown quantize method {method!r}; "
                      f"expected one of {METHODS}")

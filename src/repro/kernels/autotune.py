@@ -127,10 +127,11 @@ def _pick(n: int, tiers: Iterable[int]) -> int:
 
 
 def _matmul_blocks(M: int, K: int, N: int, dtype,
-                   w_itemsize: Optional[int] = None) -> Dict[str, int]:
+                   w_itemsize: Optional[float] = None) -> Dict[str, int]:
     """``w_itemsize``: bytes/elem of the weight tile when it differs from
-    the activation dtype (int8-W0 kernels pass 1 — the smaller tile admits
-    larger K/N blocks for the same VMEM residency)."""
+    the activation dtype (int8-W0 kernels pass 1, packed int4/nf4 kernels
+    0.5 — the smaller tile admits larger K/N blocks for the same VMEM
+    residency)."""
     bm = _pick(M, (256,))
     bn = _pick(N, (512, 256))
     bk = _pick(K, (512, 256))
@@ -154,6 +155,11 @@ def _heuristic(op: str, dims: Dict[str, int], dtype) -> Dict[str, int]:
     if op in ("lora_fused_q", "lora_dx_q"):
         return _matmul_blocks(dims["M"], dims["K"], dims["N"], dtype,
                               w_itemsize=1)
+    if op in ("lora_fused_q4", "lora_dx_q4"):
+        # two nibbles per byte: the W0 tile costs half an int8 tile in VMEM
+        # (the unpacked [bk, bn] value tile is transient VPU output)
+        return _matmul_blocks(dims["M"], dims["K"], dims["N"], dtype,
+                              w_itemsize=0.5)
     if op == "lora_dab":
         # grid is rows-only; x[bm,K] and g[bm,N] are both resident
         item = jnp.dtype(dtype).itemsize
@@ -164,11 +170,14 @@ def _heuristic(op: str, dims: Dict[str, int], dtype) -> Dict[str, int]:
             bm //= 2
         return {"bm": bm}
     if op in ("lora_grouped", "lora_grouped_dx",
-              "lora_grouped_q", "lora_grouped_dx_q"):
+              "lora_grouped_q", "lora_grouped_dx_q",
+              "lora_grouped_q4", "lora_grouped_dx_q4"):
         # bm is layout-determined (the per-group row-tile granularity chosen
         # by the dispatcher before packing); only bn/bk are tunable here.
+        w_item = 0.5 if op.endswith("_q4") else 1 if op.endswith("_q") \
+            else None
         blk = _matmul_blocks(dims["M"], dims["K"], dims["N"], dtype,
-                             w_itemsize=1 if op.endswith("_q") else None)
+                             w_itemsize=w_item)
         blk.pop("bm", None)
         return blk
     if op == "lora_grouped_dab":

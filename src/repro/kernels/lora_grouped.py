@@ -22,10 +22,13 @@ Two W0 layouts, chosen statically by ``Ew = w0.shape[0]``:
 * ``Ew == 1`` — shared base (serving: one frozen model, many adapters):
   every tile reads stack entry 0; only A/B are per-group.
 
-int8 variants mirror ``lora_quant.py``: the per-group int8 tile is cast to
-the activation dtype on the VPU and the per-output-channel scale row is
+Quantized variants mirror ``lora_quant.py``/``lora_pack4.py``: the per-group
+int8 tile is cast — or the packed int4/nf4 byte tile nibble-unpacked — to
+the activation dtype on the VPU, and the per-output-channel scale row is
 applied once per output tile (on the accumulator in the forward, folded onto
-``g`` in ``dx``) — a dense per-expert W0 never exists in HBM.
+``g`` in ``dx``) — a dense per-expert W0 never exists in HBM. The packed
+stack is ``[Ew, ceil(K/2), N]`` uint8: multi-tenant serving and pallas-mode
+MoE experts get the same 4× W0 residency cut as single-base training.
 
 ``lora_grouped_dab`` accumulates dA/dB *per group*: its output BlockSpecs
 are indexed by ``gid[t]``, so it requires the tiles of each group to be
@@ -46,6 +49,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.lora_pack4 import _unpack_tile
 from repro.kernels.tiling import block_for, pad_dim
 
 
@@ -107,24 +111,55 @@ def _grouped_fwd_q_kernel(gid_ref, x_ref, q_ref, s_ref, a_ref, b_ref, o_ref,
                       scale * delta).astype(o_ref.dtype)
 
 
+def _grouped_fwd_q4_kernel(gid_ref, x_ref, q4_ref, s_ref, a_ref, b_ref,
+                           o_ref, acc_ref, h_ref, *, scale: float, n_k: int,
+                           method: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    xb = x_ref[...]
+    wb = _unpack_tile(q4_ref[0], method, x_ref.dtype)  # nibble unpack (VPU)
+    acc_ref[...] += jax.lax.dot(xb, wb, preferred_element_type=jnp.float32)
+    h_ref[...] += jax.lax.dot(xb, a_ref[0],
+                              preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        delta = jax.lax.dot(h_ref[...].astype(x_ref.dtype), b_ref[0],
+                            preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] * s_ref[0] +
+                      scale * delta).astype(o_ref.dtype)
+
+
 @functools.lru_cache(maxsize=None)
 def _grouped_fwd_call(Mp: int, Kp: int, Np: int, Ew: int, E: int, r: int,
                       dtype_name: str, scale: float, bm: int, bn: int,
-                      bk: int, interpret: bool, quant: bool):
+                      bk: int, interpret: bool, quant: str):
     n_k = Kp // bk
     wi = _w_index(Ew)
+    packed = quant in ("int4", "nf4")
+    wblk = (1, bk // 2, bn) if packed else (1, bk, bn)
     in_specs = [
         pl.BlockSpec((bm, bk), lambda t, j, k, gid: (t, k)),          # x
-        pl.BlockSpec((1, bk, bn), lambda t, j, k, gid: (wi(t, gid), k, j)),
+        pl.BlockSpec(wblk, lambda t, j, k, gid: (wi(t, gid), k, j)),
     ]
-    if quant:
+    if quant != "none":
         in_specs.append(
             pl.BlockSpec((1, 1, bn), lambda t, j, k, gid: (wi(t, gid), 0, j)))
     in_specs += [
         pl.BlockSpec((1, bk, r), lambda t, j, k, gid: (gid[t], k, 0)),  # a
         pl.BlockSpec((1, r, bn), lambda t, j, k, gid: (gid[t], 0, j)),  # b
     ]
-    kern = _grouped_fwd_q_kernel if quant else _grouped_fwd_kernel
+    if packed:
+        kern = functools.partial(_grouped_fwd_q4_kernel, method=quant)
+    elif quant == "int8":
+        kern = _grouped_fwd_q_kernel
+    else:
+        kern = _grouped_fwd_kernel
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(Mp // bm, Np // bn, n_k),
@@ -160,8 +195,8 @@ def lora_grouped(x, w0, a, b, gid, scale: float = 2.0, *, bm: int = 128,
     Kp, Np = xp.shape[1], w0p.shape[2]
     out = _grouped_fwd_call(Mp, Kp, Np, Ew, E, r, jnp.dtype(x.dtype).name,
                             float(scale), bm, bn, bk, interpret,
-                            False)(jnp.asarray(gid, jnp.int32),
-                                   xp, w0p, ap, bp)
+                            "none")(jnp.asarray(gid, jnp.int32),
+                                    xp, w0p, ap, bp)
     return out[:, :N]
 
 
@@ -182,8 +217,32 @@ def lora_grouped_q(x, q, s, a, b, gid, scale: float = 2.0, *, bm: int = 128,
     Kp, Np = xp.shape[1], qp.shape[2]
     out = _grouped_fwd_call(Mp, Kp, Np, Ew, E, r, jnp.dtype(x.dtype).name,
                             float(scale), bm, bn, bk, interpret,
-                            True)(jnp.asarray(gid, jnp.int32),
-                                  xp, qp, sp, ap, bp)
+                            "int8")(jnp.asarray(gid, jnp.int32),
+                                    xp, qp, sp, ap, bp)
+    return out[:, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "method", "bm", "bn",
+                                             "bk", "interpret"))
+def lora_grouped_q4(x, q4, s, a, b, gid, scale: float = 2.0, *,
+                    method: str = "int4", bm: int = 128, bn: int = 128,
+                    bk: int = 128, interpret: bool = False):
+    """Packed-4-bit-base grouped forward. q4:uint8[Ew,ceil(K/2),N]
+    s:f32[Ew,1,N]; K is taken from x (odd K: pad nibble meets zero x)."""
+    Mp, K = x.shape
+    Ew, _, N = q4.shape
+    E, _, r = a.shape
+    bn, bk = block_for(N, bn), block_for(K, bk)
+    xp = pad_dim(x, bk, 1)
+    qp = pad_dim(pad_dim(q4, bk // 2, 1), bn, 2)
+    sp = pad_dim(s.astype(jnp.float32), bn, 2)
+    ap = pad_dim(a, bk, 1)
+    bp = pad_dim(b, bn, 2)
+    Kp, Np = xp.shape[1], qp.shape[2]
+    out = _grouped_fwd_call(Mp, Kp, Np, Ew, E, r, jnp.dtype(x.dtype).name,
+                            float(scale), bm, bn, bk, interpret,
+                            method)(jnp.asarray(gid, jnp.int32),
+                                    xp, qp, sp, ap, bp)
     return out[:, :N]
 
 
@@ -235,24 +294,55 @@ def _grouped_dx_q_kernel(gid_ref, g_ref, q_ref, s_ref, dh_ref, a_ref, o_ref,
         o_ref[...] = (acc_ref[...] + lora_part).astype(o_ref.dtype)
 
 
+def _grouped_dx_q4_kernel(gid_ref, g_ref, q4_ref, s_ref, dh_ref, a_ref,
+                          o_ref, acc_ref, *, n_n: int, method: str):
+    n = pl.program_id(2)
+
+    @pl.when(n == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # g@(dequant(q4)·s)ᵀ = (g·s) @ wᵀ: fold the per-N scale onto g, unpack
+    # the untransposed byte tile, contract the shared N dim of both
+    gs = g_ref[...] * s_ref[0].astype(g_ref.dtype)
+    wb = _unpack_tile(q4_ref[0], method, g_ref.dtype)
+    acc_ref[...] += jax.lax.dot_general(
+        gs, wb, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(n == n_n - 1)
+    def _finish():
+        lora_part = jax.lax.dot_general(
+            dh_ref[...], a_ref[0], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + lora_part).astype(o_ref.dtype)
+
+
 @functools.lru_cache(maxsize=None)
 def _grouped_dx_call(Mp: int, Kp: int, Np: int, Ew: int, E: int, r: int,
                      dtype_name: str, bm: int, bk: int, bn: int,
-                     interpret: bool, quant: bool):
+                     interpret: bool, quant: str):
     n_n = Np // bn
     wi = _w_index(Ew)
+    packed = quant in ("int4", "nf4")
+    wblk = (1, bk // 2, bn) if packed else (1, bk, bn)
     in_specs = [
         pl.BlockSpec((bm, bn), lambda t, j, n, gid: (t, n)),          # g
-        pl.BlockSpec((1, bk, bn), lambda t, j, n, gid: (wi(t, gid), j, n)),
+        pl.BlockSpec(wblk, lambda t, j, n, gid: (wi(t, gid), j, n)),
     ]
-    if quant:
+    if quant != "none":
         in_specs.append(
             pl.BlockSpec((1, 1, bn), lambda t, j, n, gid: (wi(t, gid), 0, n)))
     in_specs += [
         pl.BlockSpec((bm, r), lambda t, j, n, gid: (t, 0)),           # dh
         pl.BlockSpec((1, bk, r), lambda t, j, n, gid: (gid[t], j, 0)),  # a
     ]
-    kern = _grouped_dx_q_kernel if quant else _grouped_dx_kernel
+    if packed:
+        kern = functools.partial(_grouped_dx_q4_kernel, method=quant)
+    elif quant == "int8":
+        kern = _grouped_dx_q_kernel
+    else:
+        kern = _grouped_dx_kernel
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(Mp // bm, Kp // bk, n_n),
@@ -294,8 +384,8 @@ def lora_grouped_dx(g, w0, a, b, gid, scale: float = 2.0, *, bm: int = 128,
     Np, Kp = gp.shape[1], w0p.shape[1]
     out = _grouped_dx_call(Mp, Kp, Np, Ew, E, r, jnp.dtype(g.dtype).name,
                            bm, bk, bn, interpret,
-                           False)(jnp.asarray(gid, jnp.int32),
-                                  gp, w0p, dh, ap)
+                           "none")(jnp.asarray(gid, jnp.int32),
+                                   gp, w0p, dh, ap)
     return out[:, :K]
 
 
@@ -317,8 +407,32 @@ def lora_grouped_dx_q(g, q, s, a, b, gid, scale: float = 2.0, *,
     Np, Kp = gp.shape[1], qp.shape[1]
     out = _grouped_dx_call(Mp, Kp, Np, Ew, E, r, jnp.dtype(g.dtype).name,
                            bm, bk, bn, interpret,
-                           True)(jnp.asarray(gid, jnp.int32),
-                                 gp, qp, sp, dh, ap)
+                           "int8")(jnp.asarray(gid, jnp.int32),
+                                   gp, qp, sp, dh, ap)
+    return out[:, :K]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "method", "bm", "bk",
+                                             "bn", "interpret"))
+def lora_grouped_dx_q4(g, q4, s, a, b, gid, scale: float = 2.0, *,
+                       method: str = "int4", bm: int = 128, bk: int = 128,
+                       bn: int = 128, interpret: bool = False):
+    """Packed-4-bit-base grouped dx. q4:uint8[Ew,ceil(K/2),N] s:f32[Ew,1,N].
+    K is taken from a ([E,K,r]); dx rows past K are sliced off."""
+    Mp, N = g.shape
+    Ew = q4.shape[0]
+    E, K, r = a.shape
+    bk, bn = block_for(K, bk), block_for(N, bn)
+    dh = _grouped_dh(g, b, gid, scale, bm)
+    gp = pad_dim(g, bn, 1)
+    qp = pad_dim(pad_dim(q4, bk // 2, 1), bn, 2)    # untransposed bytes
+    sp = pad_dim(s.astype(jnp.float32), bn, 2)
+    ap = pad_dim(a, bk, 1)
+    Np, Kp = gp.shape[1], 2 * qp.shape[1]
+    out = _grouped_dx_call(Mp, Kp, Np, Ew, E, r, jnp.dtype(g.dtype).name,
+                           bm, bk, bn, interpret,
+                           method)(jnp.asarray(gid, jnp.int32),
+                                   gp, qp, sp, dh, ap)
     return out[:, :K]
 
 

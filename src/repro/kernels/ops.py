@@ -34,6 +34,7 @@ from repro.core import quant, structured
 from repro.kernels import autotune
 from repro.kernels import lora_fused as _lf
 from repro.kernels import lora_grouped as _lg
+from repro.kernels import lora_pack4 as _lp4
 from repro.kernels import lora_quant as _lq
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import flash_attention as _fa
@@ -154,8 +155,58 @@ def _bwd_q(scale, interpret, res, g):
 lora_linear_kernel_q.defvjp(_fwd_q, _bwd_q)
 
 
+# ---------------------------------------------------------------------------
+# Packed-4-bit-W0 LoRA linear: two nibbles per byte unpacked in VMEM
+# (kernels/lora_pack4.py, int4 sign-extend / nf4 codebook). Forward and dx
+# read only the packed bytes + scale row from HBM; dA/dB reuse the
+# unquantized fused dab kernel (they don't read W0).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def lora_linear_kernel_p4(x, q4, s, a, b, scale: float = 2.0,
+                          interpret: bool = False, method: str = "int4"):
+    """y = x@dequant(q4)·s + s_lora·(x@A)@B. q4: uint8 [ceil(K/2),N]."""
+    lead = x.shape[:-1]
+    x2 = _flat(x)
+    blk = autotune.choose_blocks("lora_fused_q4", x.dtype, M=x2.shape[0],
+                                 K=x2.shape[1], N=q4.shape[1])
+    y = _lp4.lora_fused_q4(x2, q4, s, a, b, scale, method=method,
+                           interpret=interpret, **blk)
+    return y.reshape(*lead, q4.shape[1])
+
+
+def _fwd_p4(x, q4, s, a, b, scale, interpret, method):
+    return (lora_linear_kernel_p4(x, q4, s, a, b, scale, interpret, method),
+            (x, q4, s, a, b))
+
+
+def _bwd_p4(scale, interpret, method, res, g):
+    x, q4, s, a, b = res
+    lead = x.shape[:-1]
+    g2 = _flat(g).astype(x.dtype)
+    x2 = _flat(x)
+    M, K = x2.shape
+    N = q4.shape[1]
+    dx = _lp4.lora_dx_q4(g2, q4, s, a, b, scale, method=method,
+                         interpret=interpret,
+                         **autotune.choose_blocks("lora_dx_q4", x.dtype,
+                                                  M=M, K=K, N=N))
+    da, db = _lf.lora_dab(x2, g2, a, b, scale, interpret=interpret,
+                          **autotune.choose_blocks("lora_dab", x.dtype,
+                                                   M=M, K=K, N=N))
+    # q4 is uint8 (float0 cotangent); s is frozen alongside it
+    return (dx.reshape(*lead, K), structured._zero_cot(q4),
+            jnp.zeros_like(s), da, db)
+
+
+lora_linear_kernel_p4.defvjp(_fwd_p4, _bwd_p4)
+
+
 def lora_supported(x, w0) -> bool:
-    if quant.is_quantized(w0):
+    if quant.is_packed(w0):
+        w0 = w0["q4"]
+    elif quant.is_quantized(w0):
         w0 = w0["q"]
     return x.ndim >= 2 and w0.ndim == 2
 
@@ -164,16 +215,20 @@ def lora_linear(x, w0, a, b, bias=None, scale: float = 2.0, *,
                 policy=None, interpret=None):
     """Dispatch: Pallas LoRA linear, structured fallback on unsupported
     shapes (MoE per-expert [E,·,·] weights route to
-    :func:`lora_grouped_linear` instead). ``w0`` may be a dense
-    matrix or a quantized ``{"q", "scale"}`` leaf — quantized weights route
-    to the dequant-in-VMEM kernels, falling back to the structured jnp path
-    on a dequantized copy (``core/quant.maybe_dequant``). ``policy``
-    (ExecutionPolicy) supplies kernel overrides (interpret)."""
+    :func:`lora_grouped_linear` instead). ``w0`` may be a dense matrix, an
+    int8 ``{"q", "scale"}`` leaf or a packed 4-bit ``{"q4", "scale"}`` leaf —
+    quantized weights route to the dequant-in-VMEM kernels, falling back to
+    the structured jnp path on a dequantized copy
+    (``core/quant.maybe_dequant``). ``policy`` (ExecutionPolicy) supplies
+    kernel overrides (interpret)."""
     if not lora_supported(x, w0):
         return structured.lora_linear(x, quant.maybe_dequant(w0, x.dtype),
                                       a, b, bias, scale)
     interpret = _resolve_interpret(policy, interpret)
-    if quant.is_quantized(w0):
+    if quant.is_packed(w0):
+        y = lora_linear_kernel_p4(x, w0["q4"], w0["scale"], a, b, scale,
+                                  interpret, quant.packed_method(w0))
+    elif quant.is_quantized(w0):
         y = lora_linear_kernel_q(x, w0["q"], w0["scale"], a, b, scale,
                                  interpret)
     else:
@@ -261,6 +316,43 @@ def _grouped_bwd_q(scale, bm, interpret, res, g):
 _grouped_core_q.defvjp(_grouped_fwd_q, _grouped_bwd_q)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
+def _grouped_core_p4(x, q4, s, a, b, gid, scale: float, bm: int,
+                     interpret: bool = False, method: str = "int4"):
+    """Packed-4-bit-base variant: q4:uint8[Ew,ceil(K/2),N], s:f32[Ew,1,N] —
+    only the packed bytes + scale leave HBM; the per-group dense W0 exists
+    only tile-wise in VMEM."""
+    blk = autotune.choose_blocks("lora_grouped_q4", x.dtype, M=x.shape[0],
+                                 K=x.shape[1], N=q4.shape[2])
+    return _lg.lora_grouped_q4(x, q4, s, a, b, gid, scale, method=method,
+                               bm=bm, interpret=interpret, **blk)
+
+
+def _grouped_fwd_p4(x, q4, s, a, b, gid, scale, bm, interpret, method):
+    return (_grouped_core_p4(x, q4, s, a, b, gid, scale, bm, interpret,
+                             method),
+            (x, q4, s, a, b, gid))
+
+
+def _grouped_bwd_p4(scale, bm, interpret, method, res, g):
+    x, q4, s, a, b, gid = res
+    g = g.astype(x.dtype)
+    M, K = x.shape
+    N = q4.shape[2]
+    dx = _lg.lora_grouped_dx_q4(g, q4, s, a, b, gid, scale, method=method,
+                                bm=bm, interpret=interpret,
+                                **autotune.choose_blocks(
+                                    "lora_grouped_dx_q4", x.dtype, M=M, K=K,
+                                    N=N))
+    da, db = _lg.lora_grouped_dab(x, g, a, b, gid, scale, bm=bm,
+                                  interpret=interpret)
+    return (dx, structured._zero_cot(q4), jnp.zeros_like(s), da, db,
+            structured._zero_cot(gid))
+
+
+_grouped_core_p4.defvjp(_grouped_fwd_p4, _grouped_bwd_p4)
+
+
 def _grouped_bm(rows: int) -> int:
     """Row-tile granularity for a group layout: full 128-row tiles for big
     groups, one 8-row-aligned tile otherwise (8 = f32 sublane minimum —
@@ -269,6 +361,10 @@ def _grouped_bm(rows: int) -> int:
 
 
 def _grouped_dispatch(xp, w0, a, b, gid, scale, bm, interpret):
+    if quant.is_packed(w0):
+        return _grouped_core_p4(xp, w0["q4"], w0["scale"], a, b,
+                                jnp.asarray(gid, jnp.int32), scale, bm,
+                                interpret, quant.packed_method(w0))
     if quant.is_quantized(w0):
         return _grouped_core_q(xp, w0["q"], w0["scale"], a, b,
                                jnp.asarray(gid, jnp.int32), scale, bm,
@@ -301,7 +397,12 @@ def lora_grouped_ragged(x, group_sizes, w0, a, b, scale: float = 2.0, *,
     gradients flow through the pad/slice); the packed core carries the
     custom_vjp."""
     sizes = tuple(int(s) for s in group_sizes)
-    N = (w0["q"] if quant.is_quantized(w0) else w0).shape[-1]
+    if quant.is_packed(w0):
+        N = w0["q4"].shape[-1]
+    elif quant.is_quantized(w0):
+        N = w0["q"].shape[-1]
+    else:
+        N = w0.shape[-1]
     if sum(sizes) == 0:
         return jnp.zeros((0, N), x.dtype)
     gid, _ = tiling.grouped_schedule(sizes, bm)
@@ -323,8 +424,9 @@ def lora_grouped_decode(x, w0, a, b, tile_gid, bias=None, scale: float = 2.0,
     if M % bm:
         raise ValueError(f"decode rows {M} not a multiple of tile {bm}")
     if policy is not None and policy.backend == "pallas":
-        w0e = ({"q": w0["q"][None], "scale": w0["scale"][None]}
-               if quant.is_quantized(w0) else w0[None])
+        w0e = (quant.add_group_axis(w0)
+               if quant.is_packed(w0) or quant.is_quantized(w0)
+               else w0[None])
         y = _grouped_dispatch(x, w0e, a, b, tile_gid, scale, bm,
                               _resolve_interpret(policy, interpret))
     else:

@@ -15,8 +15,10 @@ Like ``launch/train.py``, the CLI is the registry-generated
 :func:`repro.api.build_arg_parser` plus serve-only flags: the invocation is
 a declarative :class:`repro.api.TrainSpec`, validated up front, and the
 spec's :class:`~repro.api.ExecutionPolicy` is threaded through
-``decode_step`` — so ``--quantize int8`` serves against int8 frozen weights
-and kernel/interpret overrides apply exactly as in training.
+``decode_step`` — so ``--quantize int8|int4|nf4`` serves against quantized
+frozen weights (admission accounting follows via
+``core/quant.weights_format``) and kernel/interpret overrides apply exactly
+as in training.
 
 Throughput discipline: a warmup pass is synced and *discarded* before the
 timed region (compile + first-dispatch cost would otherwise deflate
@@ -36,6 +38,7 @@ import numpy as np
 
 from repro.api import ExecutionPolicy, TrainSpec, build_arg_parser
 from repro.configs import get_config
+from repro.core import quant
 from repro.models import model as model_lib
 from repro.serve import (AdapterStore, ContinuousBatcher, Request,
                          synthetic_adapters)
@@ -98,8 +101,7 @@ def _continuous(cfg, params, spec, ns, policy) -> int:
     bat = ContinuousBatcher(cfg, store, slots=spec.batch, tile=ns.tile,
                             max_len=ns.max_len, page_size=ns.page_size,
                             policy=policy, mem_budget_mb=ns.mem_budget_mb,
-                            weights_fmt="int8" if spec.quantize == "int8"
-                            else "bf16")
+                            weights_fmt=quant.weights_format(spec.quantize))
     uids = [f"tenant{i}" for i in range(ns.adapters)]
     for i, uid in enumerate(uids):
         bat.register_adapter(uid, synthetic_adapters(params, spec.seed + i))

@@ -55,12 +55,17 @@ def _trailing_spec(keys, leaf) -> Tuple:
     if last == "router":
         return (None, None)
 
-    # int8-quantized frozen weight: ``w`` became a {"q","scale"} dict, so
-    # the path ends [..., proj, "w", "q"|"scale"]. q keeps w's layout;
-    # scale is [..., 1, d_out] and _guard drops any axis landing on the
-    # size-1 dim, so both can just reuse the w rule one level up.
-    if last in ("q", "scale") and parent == "w":
+    # quantized frozen weight: ``w`` became a {"q","scale"} (int8) or
+    # {"q4","scale"[,"code","kpad"]} (packed 4-bit) dict, so the path ends
+    # [..., proj, "w", <fmt key>]. q/q4 keep w's layout (q4's halved K dim
+    # is dropped by _guard when the axis stops dividing it); scale is
+    # [..., 1, d_out] and _guard drops any axis landing on the size-1 dim.
+    if last in ("q", "q4", "scale") and parent == "w":
         return _trailing_spec(keys[:-1], leaf)
+    # nf4 codebook / odd-K parity marker: trailing 16/1 dim is replicated
+    # (never shard a codebook), leading batch dims padded with None anyway
+    if last in ("code", "kpad") and parent == "w":
+        return (None,)
 
     if in_moe and last in ("w", "a", "b") and parent in ("gate", "up", "down") \
             and hasattr(leaf, "ndim"):

@@ -101,10 +101,11 @@ def apply_linear(p, x, cfg: ArchConfig, *,
     "pallas" (MeSP via fused TPU kernels), "store_h" (Table 5 ablation),
     "plain" (MeBP — framework autodiff).
 
-    ``p["w"]`` is either a dense frozen matrix or an int8 ``{"q", "scale"}``
-    leaf (``core/quant.quantize_frozen``). The pallas path hands the
-    quantized leaf to the dequant-in-VMEM kernels; the jnp paths dequantize
-    to a dense matrix first (``maybe_dequant``) — same math, W0 materialized.
+    ``p["w"]`` is either a dense frozen matrix, an int8 ``{"q", "scale"}``
+    leaf or a packed 4-bit ``{"q4", "scale"}`` leaf
+    (``core/quant.quantize_frozen``). The pallas path hands the quantized
+    leaf to the dequant-in-VMEM kernels; the jnp paths dequantize to a dense
+    matrix first (``maybe_dequant``) — same math, W0 materialized.
 
     Multi-tenant serving: when ``p["a"]/p["b"]`` are *stacked* adapter
     resident sets ([R, d_in, r] / [R, r, d_out] — AdapterStore), the int32

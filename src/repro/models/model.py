@@ -120,9 +120,10 @@ def _stack_params(key, cfg, kind, n):
 
 
 def init_params(key, cfg: ArchConfig, *, quantize: Optional[str] = None):
-    """Init the param pytree; ``quantize="int8"`` converts every frozen
-    ``w`` leaf to a ``{"q", "scale"}`` dict (``core/quant``) — LoRA factors,
-    biases, norms and embeddings stay in ``cfg.dtype``."""
+    """Init the param pytree; ``quantize`` ("int8", or packed "int4"/"nf4")
+    converts every frozen ``w`` leaf to its ``core/quant`` format dict
+    (``{"q", "scale"}`` int8; ``{"q4", "scale", ...}`` packed 4-bit) — LoRA
+    factors, biases, norms and embeddings stay in ``cfg.dtype``."""
     k_emb, k_blk, k_tail, k_enc = jax.random.split(key, 4)
     dtype = jnp.dtype(cfg.dtype)
     p = {"embed": layers.embed_params(k_emb, cfg),

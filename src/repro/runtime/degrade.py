@@ -14,7 +14,11 @@ first:
    set; requires the dense family + SGD, validated before the switch);
 3. **quantize the frozen base to int8** — halves resident W0, LoRA factors
    and therefore gradients are untouched;
-4. **halve the sequence length** (repeats until ``min_seq``) — last resort,
+4. **re-quantize int8 → packed int4** — halves resident W0 again (two
+   nibbles per byte, ``kernels/lora_pack4.py``); only offered once the int8
+   rung is already in effect, so quantization error is added one notch at a
+   time;
+5. **halve the sequence length** (repeats until ``min_seq``) — last resort,
    it changes the token windows the run sees.
 
 Every candidate rung is validated twice before it is offered: against the
@@ -26,9 +30,10 @@ skipped. The Trainer applies the first rung that also *builds* (e.g.
 
 Optimizer state carries across compatible transitions:
 batch/seq/engine rungs leave the param tree untouched, so the state carries
-verbatim; the int8 rung rewrites frozen ``w`` leaves into ``{"q","scale"}``
-dicts, and :func:`carry_opt_state` re-maps the state tree by parameter path
-so the trained LoRA moments survive while frozen-slot entries stay ``None``.
+verbatim; the quantize rungs rewrite frozen ``w`` leaves into format dicts
+(``{"q","scale"}`` int8, ``{"q4","scale"}`` packed int4), and
+:func:`carry_opt_state` re-maps the state tree by parameter path so the
+trained LoRA moments survive while frozen-slot entries stay ``None``.
 """
 from __future__ import annotations
 
@@ -81,9 +86,10 @@ def predicted_peak_mb(spec) -> Optional[float]:
     except ImportError:
         return None
     try:
-        fmt = "int8" if spec.quantize == "int8" else "bf16"
+        from repro.core.quant import weights_format
         b = memsim.simulate(spec.arch, spec.engine, spec.seq,
-                            batch=spec.batch, weights_fmt=fmt)
+                            batch=spec.batch,
+                            weights_fmt=weights_format(spec.quantize))
         return b.total_mb
     except Exception as e:  # unknown arch / engine without memsim hook
         log.debug("memsim validation unavailable for %s: %s", spec.engine, e)
@@ -139,6 +145,11 @@ class DegradationLadder:
         if spec.quantize == "none":
             yield (dataclasses.replace(spec, quantize="int8"),
                    "quantize_int8")
+        if spec.quantize == "int8":
+            # one notch at a time: the packed rung halves resident W0 again
+            # (quantize_params re-quantizes the already-int8 tree in place)
+            yield (dataclasses.replace(spec, quantize="int4"),
+                   "quantize_int4")
         if spec.seq > self.min_seq:
             yield (dataclasses.replace(spec, seq=max(self.min_seq,
                                                      spec.seq // 2)),

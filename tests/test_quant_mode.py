@@ -1,18 +1,23 @@
-"""Quantized frozen base weights (``--quantize int8``) end-to-end.
+"""Quantized frozen base weights (``--quantize int8|int4|nf4``) end-to-end.
 
 Three layers of guarantees:
 
 1. **Format**: int8 symmetric per-output-channel round-trip error is bounded
-   by half a quantization step per channel; ``quantize_frozen`` rewrites
-   exactly the frozen ``w`` leaves and nothing else.
+   by half a quantization step per channel; the packed 4-bit formats
+   round-trip through the nibble packer at every K parity (the ragged
+   odd-K boundary pads with the format's zero nibble), survive all-zero
+   columns (scale guard), and the nf4 codebook is strictly monotone;
+   ``quantize_frozen`` rewrites exactly the frozen ``w`` leaves and nothing
+   else, for every method.
 2. **Equivalence**: with the *same* quantized weights, the pallas kernel
-   path (int8 dequantized in VMEM), the structured jnp path (dequantized
-   dense W0) and plain autodiff over the explicitly dequantized model all
-   produce the same loss and gradients (≤1e-5 relative) on non-tile-aligned
-   shapes — the quantized analogue of test_pallas_mode's contract.
+   path (int8 dequant / int4-nf4 nibble-unpack in VMEM), the structured jnp
+   path (dequantized dense W0) and plain autodiff over the explicitly
+   dequantized model all produce the same loss and gradients (≤1e-5
+   relative) on non-tile-aligned shapes — the quantized analogue of
+   test_pallas_mode's contract.
 3. **Lifecycle**: on the kernel path no dense (float) W0-shaped array is
    ever produced outside the Pallas kernels — the dequant-in-VMEM claim,
-   checked on the jaxpr.
+   checked on the jaxpr for int8 and both packed formats.
 """
 import jax
 import jax.numpy as jnp
@@ -93,6 +98,105 @@ def test_quantize_frozen_rewrites_only_w(qparams):
     assert n_train == sum(bool(m) for m in jax.tree_util.tree_leaves(tm_d))
 
 
+# ------------------------------------------------------- packed 4-bit fmt
+
+
+@pytest.mark.parametrize("k", [1, 2, 7, 96, 97])
+def test_pack_unpack_roundtrip_all_parities(k):
+    """pack→unpack is the identity for every K parity; the ragged odd-K
+    boundary stores the pad nibble without disturbing real rows."""
+    nib = jax.random.randint(jax.random.PRNGKey(k), (k, 13), 0, 16,
+                             dtype=jnp.int32).astype(jnp.uint8)
+    packed = quant.pack_nibbles(nib, pad_value=quant.NF4_ZERO_NIBBLE)
+    assert packed.shape == ((k + 1) // 2, 13) and packed.dtype == jnp.uint8
+    np.testing.assert_array_equal(quant.unpack_nibbles(packed, k), nib)
+    if k % 2:  # the pad nibble is exactly the requested value
+        np.testing.assert_array_equal(
+            quant.unpack_nibbles(packed)[-1], quant.NF4_ZERO_NIBBLE)
+
+
+@pytest.mark.parametrize("method", ["int4", "nf4"])
+@pytest.mark.parametrize("k", [97, 96])
+def test_packed_roundtrip_error_bound(method, k):
+    """Quantize→dequantize error per output channel is bounded by half the
+    format's coarsest step (int4: s; nf4: the widest codebook gap × s)."""
+    w = jax.random.normal(jax.random.PRNGKey(5), (k, 130)) * \
+        jnp.exp(jax.random.normal(jax.random.PRNGKey(6), (1, 130)))
+    leaf = quant.quantize_leaf(w, method)
+    assert leaf["q4"].shape == ((k + 1) // 2, 130)
+    assert ("kpad" in leaf) == bool(k % 2)
+    assert quant.packed_k(leaf) == k
+    wd = quant.dequantize_packed(leaf["q4"], leaf["scale"], method,
+                                 jnp.float32, k=k)
+    if method == "int4":
+        step = leaf["scale"]          # grid spacing = scale (q ∈ [-7, 7])
+    else:
+        code = jnp.asarray(quant.NF4_CODE)
+        step = float(jnp.max(jnp.diff(code))) * leaf["scale"]
+    assert bool(jnp.all(jnp.abs(wd - w) <= 0.5 * step + 1e-6))
+
+
+@pytest.mark.parametrize("method", ["int4", "nf4"])
+def test_packed_all_zero_columns(method):
+    """All-zero output channels must not divide by zero: scale is guarded
+    and the round trip returns exact zeros (no NaN/Inf)."""
+    w = jax.random.normal(jax.random.PRNGKey(7), (33, 6)) * 0.1
+    w = w.at[:, ::2].set(0.0)
+    leaf = quant.quantize_leaf(w, method)
+    wd = quant.dequantize_packed(leaf["q4"], leaf["scale"], method,
+                                 jnp.float32, k=33)
+    assert bool(jnp.all(jnp.isfinite(wd)))
+    np.testing.assert_array_equal(wd[:, ::2], 0.0)
+
+
+def test_nf4_codebook_monotone_with_exact_zero():
+    code = np.asarray(quant.NF4_CODE)
+    assert code.shape == (16,)
+    assert bool(np.all(np.diff(code) > 0))          # strictly increasing
+    assert code[quant.NF4_ZERO_NIBBLE] == 0.0       # pad nibble is exact 0
+    assert code[0] == -1.0 and code[-1] == 1.0
+
+
+def test_nf4_quantize_picks_nearest_code():
+    """searchsorted-on-midpoints must equal the brute-force nearest code."""
+    w = jax.random.normal(jax.random.PRNGKey(8), (40, 9))
+    leaf = quant.quantize_leaf(w, "nf4")
+    nib = quant.unpack_nibbles(leaf["q4"], 40)
+    code = jnp.asarray(quant.NF4_CODE)
+    brute = jnp.argmin(
+        jnp.abs(w[..., None] / leaf["scale"][..., None] - code), axis=-1)
+    np.testing.assert_array_equal(nib, brute.astype(nib.dtype))
+
+
+@pytest.mark.parametrize("method", ["int4", "nf4"])
+def test_quantize_frozen_packed_rewrites_only_w(method):
+    qp = M.init_params(jax.random.PRNGKey(0), CFG, quantize=method)
+    attn = qp["blocks"]["attn"]["q"]
+    assert quant.is_packed(attn["w"])
+    assert attn["w"]["q4"].dtype == jnp.uint8
+    assert quant.packed_method(attn["w"]) == method
+    assert attn["a"].dtype == jnp.float32
+    assert qp["embed"]["tok"].dtype == jnp.float32
+    # stacked block leaves keep a uniform leading axis (scan contract)
+    lead = {v.shape[0] for v in jax.tree_util.tree_leaves(qp["blocks"])}
+    assert lead == {CFG.n_layers}
+
+
+def test_requantize_int8_to_int4_transition():
+    """The degradation ladder's int8→int4 rung is a plain re-call: already
+    quantized leaves are dequantized and re-packed, not double-quantized."""
+    w = jax.random.normal(jax.random.PRNGKey(9), (96, 130)) * 0.1
+    tree = {"w": dict(quant.quantize_leaf(w, "int8")), "a": w[:, :4]}
+    tree4 = quant.quantize_params({"x": tree}, "int4")["x"]
+    assert quant.is_packed(tree4["w"])
+    w8 = quant.maybe_dequant(tree["w"], jnp.float32)
+    w4 = quant.maybe_dequant(tree4["w"], jnp.float32)
+    # error vs the int8 stage it was re-packed from, not vs the original
+    assert float(jnp.max(jnp.abs(w4 - w8))) <= \
+        float(jnp.max(tree4["w"]["scale"])) * 0.5 + 1e-6
+    np.testing.assert_array_equal(tree4["a"], tree["a"])  # LoRA untouched
+
+
 # ----------------------------------------------------------- equivalence
 
 
@@ -142,6 +246,40 @@ def test_quant_kernel_matches_ref_oracle():
     q, s = quant.quantize_int8(w)
     wd = quant.dequantize_int8(q, s, jnp.float32)
     y = ops.lora_linear(x, {"q": q, "scale": s}, a, b, None, 2.0)
+    np.testing.assert_allclose(y, ref.lora_fused_ref(x, wd, a, b, 2.0),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("method", ["int4", "nf4"])
+def test_packed_pallas_grads_match_structured_and_oracle(method):
+    """Packed-pallas ≡ packed-structured ≡ dequant-oracle (≤1e-5 relative)
+    on the non-tile-aligned model — the packed analogue of the int8
+    contract above, in one pass per method."""
+    qp = M.init_params(jax.random.PRNGKey(0), CFG, quantize=method)
+    batch = _batch()
+    l_s, g_s = mesp.value_and_grad(qp, CFG, batch, mode="structured")
+    l_p, g_p = mesp.value_and_grad(qp, CFG, batch, mode="pallas")
+    np.testing.assert_allclose(float(l_p), float(l_s), rtol=1e-6)
+    assert _rel(g_p, g_s) <= 1e-5
+    dense = jax.tree_util.tree_map(
+        lambda p: quant.maybe_dequant(p, jnp.float32),
+        qp, is_leaf=quant.is_packed)
+    _, g_oracle = mesp.value_and_grad(dense, CFG, batch, mode="plain")
+    assert _rel(g_p, g_oracle) <= 1e-5
+
+
+@pytest.mark.parametrize("method", ["int4", "nf4"])
+def test_packed_kernel_matches_ref_oracle_odd_k(method):
+    """ops-level on a ragged odd-K shape: the packed kernel vs the jnp
+    oracle over the explicitly dequantized W0."""
+    K, N, r = 97, 131, 8
+    x = jax.random.normal(jax.random.PRNGKey(0), (50, K)) * 0.3
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N)) * 0.05
+    a = jax.random.normal(jax.random.PRNGKey(2), (K, r)) * 0.3
+    b = jax.random.normal(jax.random.PRNGKey(3), (r, N)) * 0.3
+    leaf = quant.quantize_leaf(w, method)
+    wd = quant.maybe_dequant(leaf, jnp.float32)
+    y = ops.lora_linear(x, leaf, a, b, None, 2.0)
     np.testing.assert_allclose(y, ref.lora_fused_ref(x, wd, a, b, 2.0),
                                rtol=2e-5, atol=2e-5)
 
@@ -213,6 +351,27 @@ def test_no_dense_w0_materialized_on_kernel_path():
 
     def loss(x, a, b):
         y = ops.lora_linear(x, {"q": q, "scale": s}, a, b, None, 2.0)
+        return jnp.sum(y * y)
+
+    jaxpr = jax.make_jaxpr(jax.grad(loss, (0, 1, 2)))(x, a, b)
+    hits = _float_w0_shapes(jaxpr.jaxpr, {(K, N), (N, K)})
+    assert not hits, f"dense W0 materialized outside kernels: {hits}"
+
+
+@pytest.mark.parametrize("method", ["int4", "nf4"])
+def test_no_dense_w0_materialized_on_packed_kernel_path(method):
+    """PR-2 invariant extended to the packed formats: fwd+bwd of the packed
+    op never produce a float [K,N]/[N,K] array outside pallas_call — the
+    nibble unpack happens on the VPU, in VMEM."""
+    K, N, r = 160, 200, 8
+    x = jax.random.normal(jax.random.PRNGKey(0), (192, K)) * 0.3
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N)) * 0.05
+    a = jax.random.normal(jax.random.PRNGKey(2), (K, r)) * 0.3
+    b = jax.random.normal(jax.random.PRNGKey(3), (r, N)) * 0.3
+    leaf = quant.quantize_leaf(w, method)
+
+    def loss(x, a, b):
+        y = ops.lora_linear(x, leaf, a, b, None, 2.0)
         return jnp.sum(y * y)
 
     jaxpr = jax.make_jaxpr(jax.grad(loss, (0, 1, 2)))(x, a, b)

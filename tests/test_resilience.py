@@ -135,8 +135,23 @@ def test_ladder_walks_validated_rungs():
             assert predicted_peak_mb(cand) <= base + 1e-6
 
 
-def test_ladder_exhausts_at_floor():
+def test_ladder_offers_int4_after_int8():
+    """The packed rung is only reachable *from* int8 (one notch of
+    quantization error at a time), and is the sole rung left at the
+    batch/seq/engine floor."""
     spec = TrainSpec(engine="mesp_seq", batch=1, seq=32, quantize="int8")
+    rungs = dict((r, c) for c, r in
+                 DegradationLadder(min_batch=1, min_seq=32).candidates(spec))
+    assert set(rungs) == {"quantize_int4"}
+    assert rungs["quantize_int4"].quantize == "int4"
+    # never offered straight from an unquantized spec
+    fresh = TrainSpec(engine="mesp_pallas", batch=4, seq=256)
+    assert "quantize_int4" not in {
+        r for _, r in DegradationLadder().candidates(fresh)}
+
+
+def test_ladder_exhausts_at_floor():
+    spec = TrainSpec(engine="mesp_seq", batch=1, seq=32, quantize="int4")
     with pytest.raises(LadderExhausted):
         list(DegradationLadder(min_batch=1, min_seq=32).candidates(spec))
 
