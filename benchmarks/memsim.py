@@ -193,14 +193,19 @@ def _retention_model(method: str) -> str:
 
 
 def simulate(arch: str, method: str, seq: int, batch: int = 1,
-             rank: int = 8, weights_fmt: str | None = None) -> Breakdown:
+             rank: int = 8, weights_fmt: str | None = None,
+             reduced: bool = False) -> Breakdown:
     """``method``: a retention model or any registered engine name.
     ``weights_fmt``: None reproduces the paper's phone setting (4-bit
     mmap'd weights, mostly clean pages); "bf16"/"int8" switch to the
     HBM-resident accounting (``resident_weight_mb``) used by the quantized
-    column in paper_tables.md."""
+    column in paper_tables.md. ``reduced`` models the tiny same-family
+    config instead (what CPU runs — and telemetry's measured-vs-predicted
+    watermark cross-check — actually execute)."""
     method = _retention_model(method)
     cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
     B, N, L = batch, seq, cfg.n_layers
     lora_mb = _lora_params(cfg, rank) * BF16 / 2**20
     weights_mb = (_dirty_weight_mb(cfg) if weights_fmt is None

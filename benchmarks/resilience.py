@@ -98,6 +98,9 @@ def run(smoke: bool = False, arch: str = "qwen2.5-0.5b",
             "final_spec": {"engine": fs.engine, "batch": fs.batch,
                            "seq": fs.seq, "quantize": fs.quantize},
             "final_predicted_peak_mb": predicted_peak_mb(fs),
+            # StepGuard EWMA state + per-reason rejection counts
+            # (TrainResult.metrics["guard"], telemetry PR)
+            "guard": chaos.metrics.get("guard", {}),
         },
         "metrics": {
             "steps_to_recover": counters.get("steps_replayed", 0),
@@ -137,6 +140,11 @@ def main(argv=None) -> int:
           f"loss_delta={m['loss_delta']}")
     print(f"  final spec: {c['final_spec']} "
           f"(predicted peak {c['final_predicted_peak_mb']} MB)")
+    g = c.get("guard") or {}
+    if g:
+        print(f"  guard: accepted={g.get('accepted')} "
+          f"rejected={g.get('rejected')} by_reason="
+          f"{ {k: v for k, v in (g.get('by_reason') or {}).items() if v} }")
     print(f"wrote {args.out}")
     return 0
 

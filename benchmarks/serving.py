@@ -75,6 +75,9 @@ def _run_continuous(cfg, params, n_adapters: int, s: dict) -> dict:
             "tokens_per_s": served / dt, "counters": dict(bat.counters),
             "store": dict(store.counters),
             "pages": dict(bat.alloc.counters),
+            # unified namespaced registry view (serve.* / store.* / pages.*)
+            # — same numbers as the three dicts above, one flat snapshot
+            "metrics": bat.metrics(),
             "store_slot_mb": store.slot_bytes / 2**20}
 
 

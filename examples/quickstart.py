@@ -31,6 +31,9 @@ def main(argv=None):
                     choices=[m for m in quant.METHODS if m != "none"],
                     help="frozen-W0 format for the quantized sanity check "
                          "and the fine-tune (default: int8)")
+    ap.add_argument("--telemetry", default=None, metavar="DIR",
+                    help="write structured telemetry (events.jsonl + "
+                         "trace.json) for the fine-tune into DIR")
     args = ap.parse_args(argv)
 
     # 1. a model config (any of the 13 registered archs; .reduced() for CPU)
@@ -77,11 +80,19 @@ def main(argv=None):
     spec = TrainSpec(arch="qwen2.5-0.5b", reduced=True, engine="mesp",
                      quantize=args.quantize,
                      lr=5e-2, steps=50, seq=64, batch=4,
-                     ckpt_dir=tempfile.mkdtemp(prefix="repro_quickstart_"))
+                     ckpt_dir=tempfile.mkdtemp(prefix="repro_quickstart_"),
+                     telemetry="on" if args.telemetry else "off",
+                     telemetry_dir=args.telemetry or "")
     result = Trainer.from_spec(spec).fit(
         on_step=lambda r: r.step % 10 == 0 and print(
             f"step {r.step:3d}  loss {r.loss:.4f}"))
     print(f"final loss {result.final_loss:.4f}")
+    if args.telemetry:
+        wm = result.metrics.get("watermark", {})
+        print(f"telemetry: {result.metrics.get('events_by_kind')} -> "
+              f"{args.telemetry} (peak {wm.get('measured_peak_mb')} MB "
+              f"measured vs {wm.get('predicted_peak_mb')} MB predicted, "
+              f"source={wm.get('source')})")
 
 
 if __name__ == "__main__":

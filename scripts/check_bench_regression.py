@@ -43,6 +43,14 @@ int4/nf4 ≤ 0.30× bf16 — ``MEMORY_CEILINGS``), (b) per-model
 without regenerating the baseline), and (c) the serving residency split
 covers every swept format.
 
+``--telemetry FRESH.json`` gates a fresh ``scripts/telemetry_report.py
+--sweep`` run against the committed ``BENCH_telemetry.json``: the event
+schema version, engine × quantize row coverage, and per-row event census
+(run/step/watermark kinds present, nonzero measured peak) are hard checks.
+The measured-vs-predicted peak ratio itself is annotate-only on CPU, where
+``memory_stats()`` is unavailable and the ``live_arrays`` fallback
+lower-bounds the true peak.
+
 ``--serving FRESH.json`` gates a fresh ``benchmarks/serving.py`` run
 against the committed ``BENCH_serving.json``. Hard checks are the
 deterministic columns: the grouped-kernel schedule (live-tile count and
@@ -78,6 +86,8 @@ SERVING_BASELINE = (Path(__file__).resolve().parent.parent / "benchmarks" /
                     "results" / "BENCH_serving.json")
 MEMORY_BASELINE = (Path(__file__).resolve().parent.parent / "benchmarks" /
                    "results" / "BENCH_memory.json")
+TELEMETRY_BASELINE = (Path(__file__).resolve().parent.parent / "benchmarks" /
+                      "results" / "BENCH_telemetry.json")
 
 #: --memory ceilings on the quantized-stack residency ratio (vs bf16): the
 #: format's ideal compression (0.5x int8, 0.25x packed 4-bit) plus scale-row
@@ -400,6 +410,71 @@ def check_memory(fresh_doc: dict, base_doc: dict) -> list[str]:
     return errors
 
 
+def check_telemetry(fresh_doc: dict, base_doc: dict) -> list[str]:
+    """Gate a fresh ``scripts/telemetry_report.py --sweep`` run
+    (``BENCH_telemetry.json``) against the committed baseline.
+
+    Hard (host-independent) checks:
+      * the event schema version matches the committed baseline — a bumped
+        ``repro.telemetry.events.SCHEMA_VERSION`` must regenerate it;
+      * the fresh sweep covers every baseline engine × quantize row;
+      * every row carries the required fields, a nonzero measured peak, and
+        a per-row event census that includes run + step + watermark kinds.
+
+    The measured/predicted ratio is annotate-only on CPU/interpret hosts:
+    ``memory_stats()`` is unavailable there, and the ``live_arrays``
+    fallback lower-bounds the true peak (in-jit temporaries are invisible).
+    On a device-stats backend the same column becomes a meaningful
+    cross-check of the paper's peak-memory claim.
+    """
+    errors = []
+    fv = fresh_doc.get("schema_version")
+    bv = base_doc.get("schema_version")
+    if fv != bv:
+        errors.append(f"telemetry: schema_version {fv!r} != committed "
+                      f"{bv!r} — regenerate the baseline after a schema "
+                      f"bump")
+    else:
+        print(f"OK: telemetry schema v{fv}")
+    key = lambda r: (r.get("engine"), r.get("quantize"))  # noqa: E731
+    fresh = {key(r): r for r in fresh_doc.get("rows", [])}
+    base = {key(r): r for r in base_doc.get("rows", [])}
+    missing = sorted(set(base) - set(fresh))
+    if missing:
+        errors.append(f"telemetry: fresh sweep missing rows {missing}")
+    required = ("measured_peak_mb", "predicted_peak_mb", "ratio", "source",
+                "steps", "events")
+    for k in sorted(fresh):
+        row = fresh[k]
+        absent = [f for f in required if f not in row]
+        if absent:
+            errors.append(f"telemetry {k}: missing fields {absent}")
+            continue
+        if not row["measured_peak_mb"] > 0:
+            errors.append(f"telemetry {k}: measured peak "
+                          f"{row['measured_peak_mb']} MB — watermark never "
+                          f"sampled?")
+        kinds = set(row["events"])
+        need = {"run", "step", "watermark"}
+        if not need <= kinds:
+            errors.append(f"telemetry {k}: event census missing "
+                          f"{sorted(need - kinds)} (got {sorted(kinds)})")
+    if not errors:
+        for k in sorted(fresh):
+            row, brow = fresh[k], base.get(k, {})
+            extra = (f" (baseline {brow['ratio']})" if "ratio" in brow
+                     else "")
+            print(f"   telemetry {k[0]}/{k[1]}: measured "
+                  f"{row['measured_peak_mb']} MB vs predicted "
+                  f"{row['predicted_peak_mb']} MB, ratio "
+                  f"{row['ratio']}{extra} [source={row['source']}]")
+    if fresh_doc.get("interpret"):
+        print("note: fresh telemetry sweep is CPU/interpret — "
+              "measured/predicted ratio is annotate-only (live_arrays "
+              "lower-bounds the true peak)")
+    return errors
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("fresh", nargs="?", default=None,
@@ -429,13 +504,20 @@ def main(argv=None) -> int:
                          "committed baseline (all hard: format residency "
                          "ceilings + drift + serving split coverage)")
     ap.add_argument("--memory-baseline", default=str(MEMORY_BASELINE))
+    ap.add_argument("--telemetry", default=None, metavar="FRESH_JSON",
+                    help="gate a fresh BENCH_telemetry.json against the "
+                         "committed baseline (schema version + row "
+                         "coverage + event census hard; measured/predicted "
+                         "ratio annotate-only on CPU)")
+    ap.add_argument("--telemetry-baseline", default=str(TELEMETRY_BASELINE))
     args = ap.parse_args(argv)
     if args.fresh is None and args.gradquality is None \
             and args.resilience is None and args.scaling is None \
-            and args.serving is None and args.memory is None:
+            and args.serving is None and args.memory is None \
+            and args.telemetry is None:
         ap.error("nothing to do: pass a fresh BENCH_kernels.json, "
                  "--gradquality, --resilience, --scaling, --serving, "
-                 "and/or --memory")
+                 "--memory, and/or --telemetry")
 
     errors = []
     if args.fresh is not None:
@@ -503,6 +585,19 @@ def main(argv=None) -> int:
             print("OK: memory table within the format ceilings and "
                   "matching the committed baseline")
         errors += mem_errors
+
+    if args.telemetry is not None:
+        with open(args.telemetry) as f:
+            tel_fresh = json.load(f)
+        with open(args.telemetry_baseline) as f:
+            tel_base = json.load(f)
+        tel_errors = check_telemetry(tel_fresh, tel_base)
+        for e in tel_errors:
+            print(f"FAIL: {e}")
+        if not tel_errors:
+            print("OK: telemetry sweep schema/coverage matches the "
+                  "committed baseline")
+        errors += tel_errors
 
     return 1 if errors else 0
 

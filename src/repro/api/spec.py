@@ -54,6 +54,12 @@ class TrainSpec:
     max_retries: int = 3           # consecutive step failures before raising
     straggler_factor: float = 10.0  # watchdog: slow = factor x EWMA step time
     straggler_limit: int = 3       # consecutive slow steps before restart
+    # --- telemetry: structured metrics / events / spans (docs/telemetry.md)
+    telemetry: str = "off"         # typed JSONL events + metrics + spans
+    telemetry_dir: str = ""        # output dir ("" = <ckpt_dir>/telemetry)
+    profile: str = "off"           # jax.profiler capture around the run
+    mem_budget_mb: float = 0.0     # watermark-pressure degrade limit (0=off)
+    quiet: bool = False            # console: warnings only
     # --- sharding: (data, model) mesh over the visible devices ------------
     model_parallel: int = 1        # model-axis size; data axis = devices/mp
     # --- sharding: not CLI-serializable (PartitionSpec objects); set
@@ -72,10 +78,13 @@ class TrainSpec:
         if self.optimizer not in OPTIMIZERS:
             raise ValueError(f"unknown optimizer {self.optimizer!r}; "
                              f"expected one of {OPTIMIZERS}")
-        for name in ("degrade", "guard"):
+        for name in ("degrade", "guard", "telemetry", "profile"):
             if getattr(self, name) not in ("on", "off"):
                 raise ValueError(f"--{name} must be 'on' or 'off', "
                                  f"got {getattr(self, name)!r}")
+        if self.mem_budget_mb < 0:
+            raise ValueError(f"--mem-budget-mb must be >= 0, "
+                             f"got {self.mem_budget_mb}")
         if self.model_parallel < 1:
             raise ValueError(f"--model-parallel must be >= 1, "
                              f"got {self.model_parallel}")
@@ -108,7 +117,7 @@ class TrainSpec:
             if val == f.default:
                 continue
             flag = "--" + f.name.replace("_", "-")
-            if f.name in ("reduced", "fuse_rope"):
+            if f.name in ("reduced", "fuse_rope", "quiet"):
                 argv.append(flag)
             elif f.name == "pallas_interpret":
                 argv += [flag, {True: "on", False: "off", None: "auto"}[val]]
@@ -200,6 +209,26 @@ def build_arg_parser() -> argparse.ArgumentParser:
     ap.add_argument("--straggler-limit", type=int, default=d.straggler_limit,
                     help="consecutive slow steps before a supervised "
                          "restart from checkpoint")
+    ap.add_argument("--telemetry", default=d.telemetry,
+                    choices=["on", "off"],
+                    help="structured observability: typed JSONL events, "
+                         "metric registry, trace spans and memory "
+                         "watermarks (zero-cost when off); see "
+                         "docs/telemetry.md")
+    ap.add_argument("--telemetry-dir", default=d.telemetry_dir,
+                    help="where JSONL event shards and the Chrome trace "
+                         "land (default: <ckpt-dir>/telemetry)")
+    ap.add_argument("--profile", default=d.profile, choices=["on", "off"],
+                    help="capture a jax.profiler trace for the run under "
+                         "<telemetry-dir>/profile (requires --telemetry on)")
+    ap.add_argument("--mem-budget-mb", type=float, default=d.mem_budget_mb,
+                    help="device memory budget: when the measured watermark "
+                         "stays above 90%% of this, the degradation ladder "
+                         "walks proactively instead of waiting for an OOM "
+                         "(0 = exception-triggered only)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-step and summary console logging "
+                         "(structured telemetry sinks are unaffected)")
     ap.add_argument("--model-parallel", type=int, default=d.model_parallel,
                     help="model-axis size of the (data, model) device mesh; "
                          "the data axis takes the remaining devices. With "

@@ -41,6 +41,10 @@ class TrainResult:
     final_spec: Optional[TrainSpec] = None
     #: ladder rungs applied, in order (e.g. ["halve_batch", "quantize_int8"])
     degradations: List[str] = dataclasses.field(default_factory=list)
+    #: telemetry snapshot: guard state always (when guarded); with
+    #: ``--telemetry on`` also the metric registry, events-by-kind, span
+    #: totals and the measured-vs-memsim watermark comparison
+    metrics: dict = dataclasses.field(default_factory=dict)
 
     @property
     def final_loss(self) -> float:
@@ -246,11 +250,13 @@ class Trainer:
     # ------------------------------------------------------------------ fit
     def fit(self, steps: Optional[int] = None, *,
             data=None, on_step: Optional[Callable] = None,
-            straggler=None) -> TrainResult:
+            straggler=None, telemetry=None) -> TrainResult:
         """Run ``steps`` (default: spec.steps) supervised resilient training
         steps, resuming from the latest checkpoint in ``spec.ckpt_dir`` if
         any. Fault injection, the degradation ladder and the step guard are
-        all driven by the spec's resilience fields."""
+        all driven by the spec's resilience fields; observability by the
+        spec's telemetry fields (or an explicitly passed ``telemetry``)."""
+        from repro import telemetry as tele
         from repro.checkpoint import Checkpointer
         from repro.data.pipeline import DataState, TokenStream
         from repro.runtime import degrade as degrade_mod
@@ -264,6 +270,8 @@ class Trainer:
         self._switch_to(spec0)
         ckpt = Checkpointer(spec0.ckpt_dir, interval=spec0.ckpt_interval)
 
+        tel = telemetry if telemetry is not None \
+            else tele.Telemetry.from_spec(spec0)
         injector = None
         if spec0.inject_faults:
             plan = faults_mod.FaultPlan.from_string(
@@ -271,18 +279,31 @@ class Trainer:
             injector = faults_mod.FaultInjector(plan,
                                                ckpt_dir=spec0.ckpt_dir)
             log.warning("chaos run: injecting faults [%s]", plan.to_string())
-        guard = (StepGuard(budget=spec0.guard_budget)
+            if tel.enabled:
+                injector.on_fire = lambda step, kind: tel.emit(
+                    tele.FaultEvent(step=step, fault=kind, injected=True,
+                                    source="injector"))
+        guard = (StepGuard(budget=spec0.guard_budget,
+                           telemetry=tel if tel.enabled else None)
                  if spec0.guard == "on" else None)
         ladder = (degrade_mod.DegradationLadder()
                   if spec0.degrade == "on" else None)
         straggler = straggler or StragglerPolicy(
             factor=spec0.straggler_factor,
             consecutive_limit=spec0.straggler_limit)
+        # watermark monitor: on for telemetry runs, and whenever a memory
+        # budget asks for proactive (pre-OOM) pressure handling
+        memwatch = (tele.MemoryWatermark()
+                    if tel.enabled or spec0.mem_budget_mb > 0 else None)
+        if memwatch is not None:
+            memwatch.predicted_mb = degrade_mod.predicted_peak_mb(
+                self.live_spec) or 0.0
+        pressure = (degrade_mod.WatermarkTrigger(spec0.mem_budget_mb)
+                    if spec0.mem_budget_mb > 0 and ladder is not None
+                    else None)
 
         def _log_step(res):
-            if res.step % spec0.log_interval == 0:
-                log.info("step %5d  loss %.4f  %.3fs/step",
-                         res.step, res.loss, res.seconds)
+            tele.log_step(res, spec0.log_interval, quiet=spec0.quiet)
             if on_step:
                 on_step(res)
 
@@ -369,11 +390,21 @@ class Trainer:
                 loop.batch_iter = new_it
                 loop.step_fn = self.step_fn
                 ladder.record(rung)
+                pred = degrade_mod.predicted_peak_mb(cand)
+                if memwatch is not None:
+                    memwatch.predicted_mb = pred or 0.0
+                if tel.enabled:
+                    tel.emit(tele.DegradeEvent(
+                        step=loop.step, rung=rung,
+                        trigger=loop.degrade_trigger, engine=cand.engine,
+                        quantize=cand.quantize, batch=cand.batch,
+                        seq_len=cand.seq, predicted_peak_mb=pred or 0.0))
+                    tel.registry.counter("degrade.rungs").inc()
                 log.warning(
                     "memory pressure: degraded via %r -> engine=%s batch=%d "
                     "seq=%d quantize=%s (predicted peak %.0f MB)",
                     rung, cand.engine, cand.batch, cand.seq, cand.quantize,
-                    degrade_mod.predicted_peak_mb(cand) or float("nan"))
+                    pred or float("nan"))
                 return params, opt_state
             return None
 
@@ -384,9 +415,35 @@ class Trainer:
             restart_budget=8,    # supervised straggler restarts per run
             straggler=straggler, guard=guard, injector=injector,
             on_step=_log_step, on_oom=on_oom, restore_fn=restore_fn,
-            extra_fn=extra_fn)
-        params, opt_state, history, counters = loop.run()
+            extra_fn=extra_fn, telemetry=tel, memwatch=memwatch,
+            pressure=pressure)
+        if tel.enabled:
+            tel.emit(tele.RunEvent(
+                phase="start", engine=spec0.engine, quantize=spec0.quantize,
+                arch=spec0.arch, spec=_spec_manifest(spec0)))
+        try:
+            params, opt_state, history, counters = loop.run()
+            if tel.enabled:
+                tel.emit(tele.RunEvent(
+                    phase="end", engine=self.live_spec.engine,
+                    quantize=self.live_spec.quantize, arch=spec0.arch,
+                    steps=len(history),
+                    final_loss=float(history[-1].loss) if history else None))
+        finally:
+            if telemetry is None:   # fit owns the lifecycle it created
+                tel.close()
+        metrics: dict = {}
+        if guard is not None:
+            metrics["guard"] = guard.state()
+        if memwatch is not None:
+            metrics["watermark"] = memwatch.compare()
+        if tel.enabled:
+            metrics["registry"] = tel.registry.snapshot()
+            metrics["events_by_kind"] = tel.counts_by_kind()
+            metrics["spans"] = tel.tracer.totals()
+            metrics["telemetry_dir"] = tel.out_dir
         return TrainResult(
             params=params, opt_state=opt_state, history=history,
             counters=counters, final_spec=self.live_spec,
-            degradations=list(ladder.applied) if ladder else [])
+            degradations=list(ladder.applied) if ladder else [],
+            metrics=metrics)

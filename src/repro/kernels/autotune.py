@@ -37,9 +37,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.tiling import ceil_to
+from repro.telemetry.metrics import CounterGroup
 
 # key -> {"bm": ..., ...}
 _CACHE: Dict[str, Dict[str, int]] = {}
+
+#: module-global cache/sweep traffic counters ("autotune.*"). Module-level
+#: (not run-scoped) because kernel dispatch cannot depend on a run object;
+#: an enabled Telemetry adopts this group into its registry, so TrainResult
+#: metric snapshots report hit/miss/sweep traffic per run segment.
+COUNTERS = CounterGroup(
+    "autotune", ("cache_hit", "cache_miss", "sweeps", "sweep_candidates"))
+
+
+def cache_stats() -> Dict[str, int]:
+    """Plain-dict view of the traffic counters (benchmarks, tests)."""
+    return dict(COUNTERS)
 
 #: per-backend-generation measured caches checked into the repo
 CACHE_DIR = os.path.join(os.path.dirname(__file__), "autotune_cache")
@@ -203,7 +216,9 @@ def choose_blocks(op: str, dtype=jnp.float32, **dims: int) -> Dict[str, int]:
     _ensure_loaded()
     hit = _CACHE.get(_key(op, dims, dtype))
     if hit is not None:
+        COUNTERS["cache_hit"] += 1
         return dict(hit)
+    COUNTERS["cache_miss"] += 1
     return _heuristic(op, dims, dtype)
 
 
@@ -233,8 +248,10 @@ def autotune(op: str, run: Callable[[Dict[str, int]], object], *,
     otherwise a candidate can be crowned or buried on compile noise.
     """
     _ensure_loaded()
+    COUNTERS["sweeps"] += 1
     best, best_t = None, float("inf")
     for blocks in candidates:
+        COUNTERS["sweep_candidates"] += 1
         try:
             jax.block_until_ready(run(blocks))       # compile — never timed
             times = [_time_once(lambda: run(blocks))

@@ -27,13 +27,14 @@ step-time-vs-device-count curve).
 """
 from __future__ import annotations
 
+import glob
 import json
 import os
 import subprocess
 import sys
 import tempfile
 import traceback
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 from repro.launch.xla_flags import force_host_device_count
 
@@ -84,6 +85,24 @@ def run_fleet(payload: dict, *, devices: int, timeout: float = 1500.0) -> dict:
             f"fleet worker ({devices} devices) errored:\n"
             f"{result.get('error')}\n{result.get('traceback', '')[-4000:]}")
     return result
+
+
+def merge_fleet_telemetry(telemetry_dir: str,
+                          out_name: str = "fleet.jsonl") -> Optional[str]:
+    """Merge per-worker ``worker_<id>.jsonl`` shards under ``telemetry_dir``
+    into one deterministic timeline (sorted by ``(ts, worker, seq)`` — see
+    ``repro.telemetry.events.merge_jsonl_shards``). Returns the merged path,
+    or None when no shards exist. Byte-deterministic in the shard *set*, not
+    the glob order, so re-merges and shuffled worker finishes agree."""
+    from repro.telemetry.events import merge_jsonl_shards
+
+    shards: List[str] = sorted(
+        glob.glob(os.path.join(telemetry_dir, "worker_*.jsonl")))
+    if not shards:
+        return None
+    out = os.path.join(telemetry_dir, out_name)
+    merge_jsonl_shards(shards, out)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -141,32 +160,71 @@ def _batch_struct(tr):
     return {"tokens": s, "labels": s}
 
 
+def _worker_telemetry(payload: dict):
+    """Per-worker Telemetry writing a ``worker_<id>.jsonl`` shard when the
+    payload carries ``telemetry_dir`` (parent merges shards afterwards with
+    :func:`merge_fleet_telemetry`); the DISABLED singleton otherwise."""
+    from repro import telemetry as tele
+
+    tdir = payload.get("telemetry_dir")
+    if not tdir:
+        return tele.DISABLED
+    os.makedirs(tdir, exist_ok=True)
+    return tele.Telemetry(enabled=True, out_dir=tdir,
+                          worker=int(payload.get("worker_id", 0)))
+
+
 def task_train(payload: dict) -> dict:
     import time
 
     import jax
     import numpy as np
 
+    from repro import telemetry as tele
+
     tr = _make_trainer(payload)
     params, opt_state = tr.init_state()
     params, opt_state = tr.shard_state(params, opt_state)
     spec = tr.live_spec
+    tel = _worker_telemetry(payload)
+    memwatch = tele.MemoryWatermark() if tel.enabled else None
+    tel.emit(tele.RunEvent(phase="start", engine=spec.engine,
+                           quantize=spec.quantize, arch=spec.arch,
+                           steps=int(payload.get("steps", spec.steps))))
     losses, times = [], []
-    for step in range(int(payload.get("steps", spec.steps))):
-        batch = synth_batch(tr.cfg.vocab, spec.batch, spec.seq,
-                            spec.seed, step)
-        t0 = time.perf_counter()
-        params, opt_state, loss = jax.block_until_ready(
-            tr.step_fn(params, opt_state, batch))
-        times.append(time.perf_counter() - t0)
-        losses.append(float(loss))
+    try:
+        for step in range(int(payload.get("steps", spec.steps))):
+            batch = synth_batch(tr.cfg.vocab, spec.batch, spec.seq,
+                                spec.seed, step)
+            t0 = time.perf_counter()
+            with tel.span("step"):
+                params, opt_state, loss = jax.block_until_ready(
+                    tr.step_fn(params, opt_state, batch))
+            dt = time.perf_counter() - t0
+            times.append(dt)
+            losses.append(float(loss))
+            tel.emit(tele.StepEvent(step=step, loss=float(loss), seconds=dt))
+            if memwatch is not None:
+                m = memwatch.sample()
+                tel.emit(tele.WatermarkEvent(
+                    step=step, measured_mb=m["measured_mb"],
+                    peak_mb=m["peak_mb"], source=m["source"]))
+        tel.emit(tele.RunEvent(
+            phase="end", steps=len(losses),
+            final_loss=losses[-1] if losses else 0.0))
+    finally:
+        tel.close()
     if payload.get("out"):
         np.savez(payload["out"], **_flat(params, "params"),
                  **_flat(opt_state, "opt"))
     steady = times[WARMUP_STEPS:] or times
-    return {"losses": losses, "step_times_s": times,
-            "step_time_s": float(np.median(steady)),
-            "devices": jax.device_count(), "mesh": _mesh_axes(tr.mesh)}
+    result = {"losses": losses, "step_times_s": times,
+              "step_time_s": float(np.median(steady)),
+              "devices": jax.device_count(), "mesh": _mesh_axes(tr.mesh)}
+    if tel.enabled and tel.out_dir:
+        result["telemetry_shard"] = os.path.join(
+            tel.out_dir, f"worker_{tel.worker}.jsonl")
+    return result
 
 
 def task_collectives(payload: dict) -> dict:

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import logging
 
+from repro import telemetry
 from repro.api import Trainer, TrainSpec
 # re-exported: scripts/check_readme_flags.py and tests import the parser
 # from here, its historical home
@@ -28,25 +29,24 @@ log = logging.getLogger("repro.train")
 def main(argv=None):
     spec = TrainSpec.from_cli_args(argv).validate()
 
-    logging.basicConfig(level=logging.INFO)
+    logging.basicConfig(
+        level=logging.WARNING if spec.quiet else logging.INFO)
     trainer = Trainer.from_spec(spec)
     cfg = trainer.cfg
     log.info("arch=%s layers=%d d_model=%d engine=%s quantize=%s",
              cfg.name, cfg.n_layers, cfg.d_model, spec.engine, spec.quantize)
 
     result = trainer.fit()
-    log.info("done: final loss %.4f over %d steps",
-             result.final_loss, len(result.history))
-    counts = result.fault_counts
-    if result.counters is not None and result.counters.total_faults:
-        log.info("faults survived: %s", {k: v for k, v in counts.items()
-                                         if v})
+    # end-of-run reporting goes through the structured choke point
+    # (repro.telemetry): per-step lines already did during fit
+    telemetry.log_run_summary(result, quiet=spec.quiet)
     if result.degradations:
         fs = result.final_spec
-        log.info("degraded %d time(s) [%s]; final spec: engine=%s batch=%d "
-                 "seq=%d quantize=%s", len(result.degradations),
-                 " -> ".join(result.degradations), fs.engine, fs.batch,
-                 fs.seq, fs.quantize)
+        log.info("final spec after degradation: engine=%s batch=%d "
+                 "seq=%d quantize=%s", fs.engine, fs.batch, fs.seq,
+                 fs.quantize)
+    if spec.telemetry == "on":
+        log.info("telemetry: %s", result.metrics.get("telemetry_dir"))
     return 0
 
 

@@ -89,7 +89,8 @@ def predicted_peak_mb(spec) -> Optional[float]:
         from repro.core.quant import weights_format
         b = memsim.simulate(spec.arch, spec.engine, spec.seq,
                             batch=spec.batch,
-                            weights_fmt=weights_format(spec.quantize))
+                            weights_fmt=weights_format(spec.quantize),
+                            reduced=getattr(spec, "reduced", False))
         return b.total_mb
     except Exception as e:  # unknown arch / engine without memsim hook
         log.debug("memsim validation unavailable for %s: %s", spec.engine, e)
@@ -122,6 +123,49 @@ def carry_opt_state(opt_state, old_params, new_params):
             lambda path, _leaf: old.get(jax.tree_util.keystr(path)),
             new_params)
     return out
+
+
+class WatermarkTrigger:
+    """Proactive memory-pressure signal from measured watermarks.
+
+    The OOM-exception path reacts *after* the allocator fails; with telemetry
+    on, the resilient loop also samples the live watermark
+    (``telemetry.memwatch``) after each step and feeds it here.  Once the
+    measured residency stays above ``threshold × budget_mb`` for
+    ``consecutive`` samples, :meth:`observe` returns True and the loop walks
+    the same ladder *before* the device actually OOMs.  ``consecutive`` is
+    the hysteresis: one transient spike (a checkpoint buffer, a fresh jit)
+    must not cost a rung.
+    """
+
+    def __init__(self, budget_mb: float, *, threshold: float = 0.9,
+                 consecutive: int = 2):
+        if budget_mb <= 0:
+            raise ValueError(f"budget_mb must be > 0, got {budget_mb}")
+        self.budget_mb = budget_mb
+        self.threshold = threshold
+        self.consecutive = consecutive
+        self.trips = 0
+        self._over_streak = 0
+
+    @property
+    def limit_mb(self) -> float:
+        return self.threshold * self.budget_mb
+
+    def observe(self, measured_mb: float) -> bool:
+        """Feed one watermark sample; True = degrade now."""
+        if measured_mb >= self.limit_mb:
+            self._over_streak += 1
+        else:
+            self._over_streak = 0
+        if self._over_streak >= self.consecutive:
+            self.trips += 1
+            self._over_streak = 0   # re-arm after the rung lands
+            return True
+        return False
+
+    def reset(self) -> None:
+        self._over_streak = 0
 
 
 class DegradationLadder:

@@ -52,6 +52,7 @@ class FaultCounters:
     step_failures: int = 0        # generic exceptions (incl. crashes)
     oom_events: int = 0           # RESOURCE_EXHAUSTED-class failures
     degradations: int = 0         # ladder rungs applied
+    watermark_triggers: int = 0   # proactive degrades from measured pressure
     guard_skips: int = 0          # anomalous steps rejected + rewound
     straggler_restarts: int = 0   # watchdog-triggered supervised restarts
     ckpt_quarantines: int = 0     # corrupt checkpoints quarantined
@@ -144,6 +145,17 @@ class ResilientLoop:
       update ``loop.batch_iter``/``loop.step_fn`` as needed.
     * ``extra_fn()`` — dict merged into every checkpoint manifest (the
       Trainer records the live spec so restores are self-describing).
+    * ``telemetry`` — :class:`repro.telemetry.Telemetry`; when enabled the
+      loop emits typed step/fault/checkpoint/watermark events, wraps
+      data-fetch/step/checkpoint/restore in trace spans and keeps
+      ``train.*`` metrics. Disabled (the default) the hot path pays one
+      flag check and nothing else — same jitted step object, no span or
+      record allocation (asserted by tests/test_telemetry.py).
+    * ``memwatch`` — :class:`repro.telemetry.MemoryWatermark`; sampled after
+      every successful step.
+    * ``pressure`` — :class:`repro.runtime.degrade.WatermarkTrigger`; fed
+      the watermark samples, and when it trips the loop walks the same
+      ``on_oom`` ladder *before* the allocator actually fails.
     """
 
     def __init__(self, step_fn: Callable[[Any, Any, dict], tuple],
@@ -162,7 +174,10 @@ class ResilientLoop:
                  on_step: Optional[Callable[[StepResult], None]] = None,
                  on_oom: Optional[Callable] = None,
                  restore_fn: Optional[Callable] = None,
-                 extra_fn: Optional[Callable[[], dict]] = None):
+                 extra_fn: Optional[Callable[[], dict]] = None,
+                 telemetry=None,
+                 memwatch=None,
+                 pressure=None):
         self.step_fn = step_fn
         self.init_state = init_state
         self.batch_iter = batch_iter
@@ -179,6 +194,15 @@ class ResilientLoop:
         self.on_oom = on_oom
         self.restore_fn = restore_fn
         self.extra_fn = extra_fn
+        if telemetry is None:
+            from repro.telemetry import DISABLED
+            telemetry = DISABLED
+        self.telemetry = telemetry
+        self.memwatch = memwatch
+        self.pressure = pressure
+        #: why the current on_oom invocation happened ("oom" | "watermark");
+        #: read by the Trainer's degrade hook to tag its DegradeEvent
+        self.degrade_trigger = "oom"
 
         self.counters = FaultCounters()
         self.step = 0
@@ -199,7 +223,12 @@ class ResilientLoop:
         return state.to_dict() if state is not None else None
 
     def _restore(self):
+        with self.telemetry.span("restore"):
+            return self._restore_inner()
+
+    def _restore_inner(self):
         self.straggler.reset()
+        t0 = time.monotonic()
         if self.restore_fn is not None:
             step, params, opt_state = self.restore_fn(self)
         else:
@@ -221,20 +250,50 @@ class ResilientLoop:
                         self._initial_data_state)
         if step < self.step:
             self.counters.steps_replayed += self.step - step
+        prev_quar = self.counters.ckpt_quarantines
         self.counters.ckpt_quarantines = len(
             getattr(self.ckpt, "quarantined", ()))
+        tel = self.telemetry
+        if tel.enabled:
+            from repro.telemetry import CheckpointEvent
+            tel.emit(CheckpointEvent(action="restore", step=step,
+                                     seconds=time.monotonic() - t0,
+                                     path=self.ckpt.directory))
+            for _ in range(self.counters.ckpt_quarantines - prev_quar):
+                tel.emit(CheckpointEvent(action="quarantine", step=step,
+                                         path=self.ckpt.directory))
+            tel.registry.counter("ckpt.restores").inc()
         return step, params, opt_state
 
     # ----------------------------------------------------------------- save
     def _save_now(self) -> None:
-        self.ckpt.save(self.step, self.params, self.opt_state,
-                       data_state=self._data_state_dict(),
-                       extra=self.extra_fn() if self.extra_fn else None)
+        t0 = time.monotonic()
+        with self.telemetry.span("checkpoint"):
+            self.ckpt.save(self.step, self.params, self.opt_state,
+                           data_state=self._data_state_dict(),
+                           extra=self.extra_fn() if self.extra_fn else None)
         self._last_saved = self.step
+        tel = self.telemetry
+        if tel.enabled:
+            from repro.telemetry import CheckpointEvent
+            tel.emit(CheckpointEvent(action="save", step=self.step,
+                                     seconds=time.monotonic() - t0,
+                                     path=self.ckpt.directory))
+            tel.registry.counter("ckpt.saves").inc()
 
     # -------------------------------------------------------------- failure
     def _handle_failure(self, e: BaseException) -> None:
-        if is_oom_error(e):
+        oom = is_oom_error(e)
+        tel = self.telemetry
+        if tel.enabled:
+            from repro.telemetry import FaultEvent as TelFault
+            tel.emit(TelFault(step=self.step,
+                              fault="oom" if oom else "exception",
+                              injected=type(e).__name__.startswith("Injected"),
+                              source="loop", error=str(e)))
+            tel.registry.counter(
+                "faults.oom" if oom else "faults.exception").inc()
+        if oom:
             self.counters.oom_events += 1
             log.warning("step %d hit memory pressure: %s", self.step, e)
             if self.on_oom is not None:
@@ -263,20 +322,75 @@ class ResilientLoop:
             time.sleep(delay)
         self.step, self.params, self.opt_state = self._restore()
 
+    # ---------------------------------------------------------- memwatch
+    def _sample_watermark(self) -> None:
+        """Post-step watermark sample: metrics/event, then pressure check."""
+        m = self.memwatch.sample()
+        pred = self.memwatch.predicted_mb
+        tel = self.telemetry
+        if tel.enabled:
+            from repro.telemetry import WatermarkEvent
+            tel.registry.gauge("mem.measured_mb").set(m["measured_mb"])
+            tel.registry.gauge("mem.peak_mb").set(m["peak_mb"])
+            tel.emit(WatermarkEvent(
+                step=self.step, measured_mb=round(m["measured_mb"], 3),
+                peak_mb=round(m["peak_mb"], 3),
+                predicted_mb=round(pred or 0.0, 3),
+                ratio=round(m["peak_mb"] / pred, 4) if pred else 0.0,
+                source=m["source"]))
+        if self.pressure is not None \
+                and self.pressure.observe(m["measured_mb"]):
+            self._degrade_for_pressure(m["measured_mb"])
+
+    def _degrade_for_pressure(self, measured_mb: float) -> None:
+        """Walk the on_oom ladder proactively, before the allocator fails."""
+        if self.on_oom is None:
+            self.pressure = None
+            return
+        self.counters.watermark_triggers += 1
+        log.warning("watermark pressure: %.1f MB >= %.1f MB limit at step "
+                    "%d; degrading proactively", measured_mb,
+                    self.pressure.limit_mb, self.step)
+        self.degrade_trigger = "watermark"
+        try:
+            swapped = self.on_oom(self)
+        finally:
+            self.degrade_trigger = "oom"
+        if swapped is not None:
+            self.params, self.opt_state = swapped
+            self.counters.degradations += 1
+            self.straggler.reset()
+            self._save_now()
+        else:
+            # ladder exhausted: nothing cheaper exists, stop re-checking
+            log.warning("watermark pressure with no rung left; trigger "
+                        "disabled for the rest of the run")
+            self.pressure = None
+
     # ------------------------------------------------------------------ run
     def run(self):
         from repro.runtime.guard import update_norm as _update_norm
 
         self.step, self.params, self.opt_state = self._restore()
+        tel = self.telemetry
         results = []
         while self.step < self.total_steps:
             t0 = time.monotonic()
             try:
                 if self.injector is not None:
                     self.injector.before_step(self.step)
-                batch = next(self.batch_iter)
-                new_params, new_opt, loss = self.step_fn(
-                    self.params, self.opt_state, batch)
+                # one flag check on the hot path: the disabled branch runs
+                # the exact pre-telemetry code, no span/context allocation
+                if tel.enabled:
+                    with tel.span("data_fetch"):
+                        batch = next(self.batch_iter)
+                    with tel.span("step"):
+                        new_params, new_opt, loss = self.step_fn(
+                            self.params, self.opt_state, batch)
+                else:
+                    batch = next(self.batch_iter)
+                    new_params, new_opt, loss = self.step_fn(
+                        self.params, self.opt_state, batch)
                 if self.injector is not None:
                     loss = self.injector.after_step(self.step, loss)
                 lossf = float(loss)
@@ -288,7 +402,8 @@ class ResilientLoop:
             if self.guard is not None:
                 unorm = (_update_norm(self.params, new_params)
                          if self.guard.track_update_norm else None)
-                if self.guard.observe(lossf, update_norm=unorm) == "reject":
+                if self.guard.observe(lossf, update_norm=unorm,
+                                      step=self.step) == "reject":
                     self.counters.guard_skips += 1
                     continue      # rewind: update discarded, batch skipped
             dt = time.monotonic() - t0
@@ -315,6 +430,14 @@ class ResilientLoop:
             res = StepResult(self.step, lossf, dt,
                              retried=self.counters.total_faults > 0)
             results.append(res)
+            if tel.enabled:
+                from repro.telemetry import StepEvent
+                tel.emit(StepEvent(step=self.step, loss=lossf, seconds=dt))
+                tel.registry.counter("train.steps").inc()
+                tel.registry.gauge("train.loss").set(lossf)
+                tel.registry.histogram("train.step_seconds").record(dt)
+            if self.memwatch is not None:
+                self._sample_watermark()
             if self.on_step:
                 self.on_step(res)
             saved = self.ckpt.maybe_save(
@@ -323,6 +446,11 @@ class ResilientLoop:
                 extra=self.extra_fn() if self.extra_fn else None)
             if saved:
                 self._last_saved = self.step
+                if tel.enabled:
+                    from repro.telemetry import CheckpointEvent
+                    tel.emit(CheckpointEvent(action="save", step=self.step,
+                                             path=self.ckpt.directory))
+                    tel.registry.counter("ckpt.saves").inc()
         # forced final save: a completed run is always resumable/servable
         # from its last step, even when total_steps % interval != 0
         if self.step > 0 and self._last_saved != self.step:

@@ -189,12 +189,18 @@ class FaultInjector:
         self.ckpt_dir = ckpt_dir
         self._fired: set = set()
         self.log: list = []          # (step_fired, kind) in firing order
+        #: optional ``(step, kind) -> None`` hook fired on every injection
+        #: (the trainer points this at telemetry so chaos timelines carry a
+        #: typed event at the exact firing step, raising kinds included)
+        self.on_fire = None
 
     def _fire(self, idx: int, step: int, ev: FaultEvent):
         self._fired.add(idx)
         self.log.append((step, ev.kind))
         log.warning("injecting fault %r (planned step %d) at step %d",
                     ev.kind, ev.step, step)
+        if self.on_fire is not None:
+            self.on_fire(step, ev.kind)
 
     def before_step(self, step: int) -> None:
         for idx, ev in enumerate(self.plan.events):

@@ -12,6 +12,12 @@ The budget is bounded: more than ``budget`` rejected steps per run raises
 :class:`GuardExhausted`, because a model that keeps producing NaNs is
 diverged, not unlucky, and silently skipping forever would burn the
 device's energy budget on garbage.
+
+Observability: every rejection is categorized into one of :data:`REASONS`
+and counted in ``by_reason``; :meth:`StepGuard.state` exposes the EWMAs and
+counts (reported by ``benchmarks/resilience.py``), and with a telemetry
+object attached each rejection emits a typed ``guard`` event and updates
+``guard.*`` gauges on the metric registry.
 """
 from __future__ import annotations
 
@@ -23,6 +29,9 @@ import jax
 import jax.numpy as jnp
 
 log = logging.getLogger("repro.guard")
+
+#: rejection categories, in check order
+REASONS = ("nonfinite_loss", "nonfinite_norm", "loss_spike", "norm_spike")
 
 
 class GuardExhausted(RuntimeError):
@@ -59,45 +68,71 @@ class StepGuard:
 
     def __init__(self, budget: int = 8, spike_factor: float = 25.0,
                  alpha: float = 0.2, warmup: int = 8,
-                 track_update_norm: bool = True):
+                 track_update_norm: bool = True, telemetry=None):
         self.budget = budget
         self.spike_factor = spike_factor
         self.alpha = alpha
         self.warmup = warmup
         self.track_update_norm = track_update_norm
         self.rejected = 0
+        self.by_reason = {r: 0 for r in REASONS}
         self._accepted = 0
         self._loss_ewma: Optional[float] = None
         self._norm_ewma: Optional[float] = None
+        self.telemetry = telemetry
 
-    def _reject(self, reason: str) -> str:
+    def state(self) -> dict:
+        """EWMA state + per-reason counts (TrainResult.metrics["guard"],
+        reported by benchmarks/resilience.py)."""
+        return {"accepted": self._accepted, "rejected": self.rejected,
+                "budget": self.budget,
+                "loss_ewma": self._loss_ewma, "norm_ewma": self._norm_ewma,
+                "by_reason": dict(self.by_reason)}
+
+    def _reject(self, reason: str, detail: str, step: Optional[int]) -> str:
         self.rejected += 1
+        self.by_reason[reason] += 1
         log.warning("step guard: rejecting step (%s), %d/%d budget used",
-                    reason, self.rejected, self.budget)
+                    detail, self.rejected, self.budget)
+        tel = self.telemetry
+        if tel is not None and tel.enabled:
+            from repro.telemetry import GuardEvent
+            tel.emit(GuardEvent(
+                step=step if step is not None else -1, reason=reason,
+                detail=detail, loss_ewma=self._loss_ewma,
+                norm_ewma=self._norm_ewma, rejected=self.rejected,
+                budget=self.budget))
+            tel.registry.counter(f"guard.reject.{reason}").inc()
+            tel.registry.gauge("guard.rejected").set(self.rejected)
         if self.rejected > self.budget:
             raise GuardExhausted(
                 f"step guard budget exhausted: {self.rejected} anomalous "
-                f"steps rejected (budget {self.budget}); last: {reason}")
+                f"steps rejected (budget {self.budget}); last: {detail}")
         return "reject"
 
-    def observe(self, loss: float, update_norm: Optional[float] = None) -> str:
+    def observe(self, loss: float, update_norm: Optional[float] = None,
+                step: Optional[int] = None) -> str:
         """Returns ``"accept"`` or ``"reject"``; raises on exhausted budget."""
         if not math.isfinite(loss):
-            return self._reject(f"non-finite loss {loss}")
+            return self._reject("nonfinite_loss",
+                                f"non-finite loss {loss}", step)
         if update_norm is not None and not math.isfinite(update_norm):
-            return self._reject(f"non-finite update norm {update_norm}")
+            return self._reject("nonfinite_norm",
+                                f"non-finite update norm {update_norm}", step)
         warmed = self._accepted >= self.warmup
         if (warmed and self._loss_ewma is not None
                 and loss > self.spike_factor * self._loss_ewma):
             return self._reject(
+                "loss_spike",
                 f"loss spike {loss:.4g} > {self.spike_factor:g}x EWMA "
-                f"{self._loss_ewma:.4g}")
+                f"{self._loss_ewma:.4g}", step)
         if (warmed and update_norm is not None
                 and self._norm_ewma is not None and self._norm_ewma > 0
                 and update_norm > self.spike_factor * self._norm_ewma):
             return self._reject(
+                "norm_spike",
                 f"update-norm spike {update_norm:.4g} > "
-                f"{self.spike_factor:g}x EWMA {self._norm_ewma:.4g}")
+                f"{self.spike_factor:g}x EWMA {self._norm_ewma:.4g}", step)
         # accepted: fold into the baselines
         self._accepted += 1
         a = self.alpha
@@ -107,4 +142,9 @@ class StepGuard:
             self._norm_ewma = (update_norm if self._norm_ewma is None
                                else (1 - a) * self._norm_ewma
                                + a * update_norm)
+        tel = self.telemetry
+        if tel is not None and tel.enabled:
+            tel.registry.gauge("guard.loss_ewma").set(self._loss_ewma)
+            if self._norm_ewma is not None:
+                tel.registry.gauge("guard.norm_ewma").set(self._norm_ewma)
         return "accept"

@@ -45,6 +45,9 @@ from repro.api.policy import STRUCTURED, ExecutionPolicy
 from repro.models import model as model_lib
 from repro.serve.paged import PagedKVAllocator
 from repro.serve.store import AdapterStore, StoreFull
+from repro.telemetry import DISABLED as _NO_TELEMETRY
+from repro.telemetry import AdmissionEvent
+from repro.telemetry.metrics import CounterGroup, MetricRegistry
 
 log = logging.getLogger("repro.serve")
 
@@ -91,7 +94,8 @@ class ContinuousBatcher:
                  tile: int = 2, max_len: int = 128, page_size: int = 16,
                  policy: ExecutionPolicy = STRUCTURED,
                  mem_budget_mb: Optional[float] = None,
-                 weights_fmt: str = "bf16", rank: Optional[int] = None):
+                 weights_fmt: str = "bf16", rank: Optional[int] = None,
+                 telemetry=None):
         if slots % tile:
             raise ValueError(f"slots ({slots}) must be a multiple of the "
                              f"tile size ({tile})")
@@ -113,10 +117,21 @@ class ContinuousBatcher:
         self._registry: Dict[str, object] = {}
         self.queue: List[Request] = []
         self.results: Dict[str, List[int]] = {}
-        self.counters = {"admitted": 0, "completed": 0, "steps": 0,
-                         "prefill_tokens": 0, "decoded_tokens": 0,
-                         "rejected_pages": 0, "rejected_headroom": 0,
-                         "rejected_tiles": 0, "rejected_store": 0}
+        self.counters = CounterGroup(
+            "serve", ("admitted", "completed", "steps", "prefill_tokens",
+                      "decoded_tokens", "rejected_pages",
+                      "rejected_headroom", "rejected_tiles",
+                      "rejected_store"))
+        # one namespaced registry over the three formerly-private counter
+        # dicts (serve.* / store.* / pages.*); a telemetry object shares its
+        # registry (and gains spans + admission events), otherwise the
+        # batcher owns a local one — snapshot via .metrics()
+        self._tel = telemetry if telemetry is not None else _NO_TELEMETRY
+        self.registry = (telemetry.registry if telemetry is not None
+                         else MetricRegistry())
+        self.registry.register_group(self.counters)
+        self.registry.register_group(self.store.counters)
+        self.registry.register_group(self.alloc.counters)
         self._jstep = jax.jit(
             lambda p, c, t, g: model_lib.decode_step(
                 p, cfg, c, t, policy=policy, adapter_tiles=g))
@@ -125,6 +140,21 @@ class ContinuousBatcher:
 
     def register_adapter(self, uid: str, adapters) -> None:
         self._registry[uid] = adapters
+
+    # -- metrics ------------------------------------------------------------
+
+    def metrics(self) -> Dict[str, object]:
+        """Unified namespaced snapshot (serve.* / store.* / pages.*) —
+        what ``benchmarks/serving.py`` reports."""
+        return self.registry.snapshot()
+
+    def _reject(self, req: Request, reason: str) -> bool:
+        self.counters[f"rejected_{reason}"] += 1
+        if self._tel.enabled:
+            self._tel.emit(AdmissionEvent(
+                action="reject", rid=req.rid, adapter=req.adapter,
+                reason=reason, step=self.counters["steps"]))
+        return False
 
     # -- admission ----------------------------------------------------------
 
@@ -170,26 +200,21 @@ class ContinuousBatcher:
     def _try_place(self, req: Request) -> bool:
         t = self._find_tile(req.adapter)
         if t is None:
-            self.counters["rejected_tiles"] += 1
-            return False
+            return self._reject(req, "tiles")
         if not self.store.can_admit(req.adapter):
-            self.counters["rejected_store"] += 1
-            return False
+            return self._reject(req, "store")
         total = len(req.prompt) + req.max_new
         if not self._headroom_ok(
                 self.store.lookup(req.adapter) is None, total):
-            self.counters["rejected_headroom"] += 1
-            return False
+            return self._reject(req, "headroom")
         if not self.alloc.reserve(req.rid, total):
-            self.counters["rejected_pages"] += 1
-            return False
+            return self._reject(req, "pages")
         try:
             slot = self.store.acquire(req.adapter,
                                       self._registry[req.adapter])
         except StoreFull:
             self.alloc.free(req.rid)
-            self.counters["rejected_store"] += 1
-            return False
+            return self._reject(req, "store")
         if self.tile_adapter[t] is None:
             self.tile_adapter[t] = req.adapter
         self.tile_gid[t] = slot
@@ -197,6 +222,10 @@ class ContinuousBatcher:
         self.cache = _reset_slot(self.cache, b)
         self._rows[b] = _Slot(req=req, pending=list(req.prompt))
         self.counters["admitted"] += 1
+        if self._tel.enabled:
+            self._tel.emit(AdmissionEvent(
+                action="admit", rid=req.rid, adapter=req.adapter,
+                step=self.counters["steps"]))
         return True
 
     def _admit(self) -> None:
@@ -216,6 +245,10 @@ class ContinuousBatcher:
         if all(self._rows[i].req is None for i in self._tile_rows(t)):
             self.tile_adapter[t] = None   # adapter now evictable
         self.counters["completed"] += 1
+        if self._tel.enabled:
+            self._tel.emit(AdmissionEvent(
+                action="complete", rid=row.req.rid, adapter=row.req.adapter,
+                step=self.counters["steps"]))
 
     # -- decode -------------------------------------------------------------
 
@@ -226,16 +259,30 @@ class ContinuousBatcher:
     def step(self) -> bool:
         """Admit, then advance every active row by one token. Returns False
         when there is nothing to do (no active rows, empty queue)."""
-        self._admit()
+        tel = self._tel
+        if tel.enabled:
+            with tel.span("admission"):
+                self._admit()
+        else:
+            self._admit()
         if self.active == 0:
             return False
         toks = np.zeros((self.slots, 1), np.int32)
+        prefilling = any(r.req is not None and r.pending for r in self._rows)
         for b, row in enumerate(self._rows):
             if row.req is not None:
                 toks[b, 0] = row.pending[0] if row.pending else row.last
-        logits, self.cache = self._jstep(
-            self.store.params, self.cache, jnp.asarray(toks),
-            jnp.asarray(self.tile_gid))
+        if tel.enabled:
+            # prefill runs through the same step (prefill-as-decode); the
+            # span name records which phase this step predominantly served
+            with tel.span("prefill" if prefilling else "decode"):
+                logits, self.cache = self._jstep(
+                    self.store.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(self.tile_gid))
+        else:
+            logits, self.cache = self._jstep(
+                self.store.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(self.tile_gid))
         nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
         self.counters["steps"] += 1
         done = []

@@ -19,6 +19,8 @@ from __future__ import annotations
 
 from typing import Dict, List
 
+from repro.telemetry.metrics import CounterGroup
+
 
 class PagedKVAllocator:
     def __init__(self, n_pages: int, page_size: int):
@@ -28,8 +30,10 @@ class PagedKVAllocator:
         self.page_size = page_size
         self._free: List[int] = list(range(n_pages - 1, -1, -1))
         self._owned: Dict[str, List[int]] = {}
-        self.counters = {"reserved": 0, "freed": 0, "peak_pages": 0,
-                         "rejected": 0}
+        # dict-compatible; namespaced "pages.*" when adopted by a batcher's
+        # metric registry (repro.telemetry.metrics)
+        self.counters = CounterGroup(
+            "pages", ("reserved", "freed", "peak_pages", "rejected"))
 
     def pages_for(self, tokens: int) -> int:
         return -(-max(tokens, 0) // self.page_size)

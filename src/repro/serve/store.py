@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import model as model_lib
+from repro.telemetry.metrics import CounterGroup
 
 
 class StoreFull(RuntimeError):
@@ -97,8 +98,10 @@ class AdapterStore:
         self._slot_of: "OrderedDict[str, int]" = OrderedDict()  # LRU order
         self._free = list(range(capacity - 1, -1, -1))          # pop() -> 0,1,..
         self._pins: Dict[str, int] = {}
-        self.counters = {"hits": 0, "misses": 0, "evictions": 0,
-                         "inserts": 0}
+        # dict-compatible; namespaced "store.*" when adopted by a batcher's
+        # metric registry (repro.telemetry.metrics)
+        self.counters = CounterGroup(
+            "store", ("hits", "misses", "evictions", "inserts"))
 
     # -- byte accounting ----------------------------------------------------
 
